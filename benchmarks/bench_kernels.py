@@ -1,0 +1,53 @@
+"""Kernel micro-bench: interpret-mode wall time vs jnp oracle on CPU.
+
+These are correctness-path timings (Mosaic only lowers on real TPU);
+`derived` carries the oracle-relative slowdown so regressions in the
+kernel wrappers are visible.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, n=3):
+    fn()  # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jnp.asarray(fn()).block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(csv_rows: list):
+    print("\n== kernel micro-bench (interpret mode, CPU) ==")
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
+    img = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    filt = jnp.asarray(rng.standard_normal((4, 4)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal(65536), jnp.float32)
+    h = jnp.asarray(rng.standard_normal(15), jnp.float32)
+    xr = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    xi = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+
+    cases = [
+        ("mm_512", lambda: ops.matmul(a, b, bm=128, bn=128, bk=128),
+         lambda: ref.matmul(a, b)),
+        ("conv2d_256", lambda: ops.conv2d(img, filt, bh=64, bw=64),
+         lambda: ref.conv2d(img, filt)),
+        ("fir_65536", lambda: ops.fir(x, h, bn=4096),
+         lambda: ref.fir(x, h)),
+        ("fft2d_128", lambda: ops.fft2d(xr, xi, bm=64, bn=64, bk=64),
+         lambda: ref.fft2d(xr, xi)),
+    ]
+    for name, kfn, rfn in cases:
+        ku = _time(kfn)
+        ru = _time(rfn)
+        print(f"  {name:12s} kernel {ku:10.0f} us  oracle {ru:10.0f} us")
+        csv_rows.append((f"kernel_{name}", ku,
+                         f"oracle_us={ru:.0f};slowdown={ku/max(ru,1):.1f}x"))

@@ -1,0 +1,58 @@
+"""Paper Fig. 6 analogue: throughput scaling vs #AIEs, #PLIOs, buffer size.
+
+The paper shows (a) throughput grows with AIE count but per-AIE efficiency
+drops past ~200 AIEs (memory-bound on PLIO/PL-buffer), (b) more PLIOs and
+larger PL buffers recover it.  We reproduce the curves from the structural
+model: for each array size we re-run the mapper and report the bound and
+its binding term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core import AIE_TARGET, best_plan, matmul
+from repro.core.mapper import predict_bounds
+
+
+def run(csv_rows: list):
+    rec = matmul(10240, 10240, 10240, "int8")  # paper Fig.6 crossover
+    # is memory-bound past ~200 AIEs; int8's high MAC rate exposes it
+
+    print("\n== Fig.6a: throughput vs #AIEs (MM int8) ==")
+    print(f"{'AIEs':>5s} {'bound':>8s} {'TOPS/AIE':>9s} {'binding':>9s}")
+    for shape in [(2, 8), (4, 8), (8, 8), (8, 16), (8, 25), (8, 32),
+                  (8, 50)]:
+        n = shape[0] * shape[1]
+        tgt = dataclasses.replace(AIE_TARGET, mesh_shape=shape)
+        t0 = time.perf_counter()
+        plan = best_plan(rec, tgt)
+        us = (time.perf_counter() - t0) * 1e6
+        b = predict_bounds(rec, plan.partition, tgt)
+        binding = "compute" if b["compute"] <= b["array_level"] else "memory"
+        print(f"{n:5d} {b['array_level']:8.2f} "
+              f"{b['array_level']/n:9.4f} {binding:>9s}")
+        csv_rows.append((f"fig6a_aies_{n}", us,
+                         f"bound={b['array_level']:.2f};binding={binding}"))
+
+    print("\n== Fig.6b: throughput vs PLIO bandwidth (MM int8, 400 AIEs) ==")
+    for frac in (0.25, 0.5, 1.0, 2.0):
+        tgt = dataclasses.replace(
+            AIE_TARGET, edge_gbps=AIE_TARGET.edge_gbps * frac)
+        plan = best_plan(rec, tgt)
+        b = predict_bounds(rec, plan.partition, tgt)
+        print(f"  PLIO x{frac:<4}: bound {b['array_level']:6.2f} TOPS")
+        csv_rows.append((f"fig6b_plio_x{frac}", 0.0,
+                         f"bound={b['array_level']:.2f}"))
+
+    print("\n== Fig.6c: throughput vs PL buffer size (MM int8) ==")
+    for mb in (8, 16, 32, 64):
+        tgt = dataclasses.replace(
+            AIE_TARGET, pl_buffer_bytes=mb * 2**20)
+        plan = best_plan(rec, tgt)
+        b = predict_bounds(rec, plan.partition, tgt)
+        print(f"  buffer {mb:3d} MiB: end-to-end bound "
+              f"{b['end_to_end']:6.2f} TOPS (array {b['array_level']:.2f})")
+        csv_rows.append((f"fig6c_buf_{mb}MiB", 0.0,
+                         f"e2e={b['end_to_end']:.2f}"))

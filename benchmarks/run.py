@@ -1,0 +1,49 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
+
+    PYTHONPATH=src python -m benchmarks.run [--only recurrences,...]
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only != "all" else None
+
+    from benchmarks import (
+        bench_kernels,
+        bench_mapping,
+        bench_recurrences,
+        bench_scaling,
+        roofline_table,
+    )
+
+    sections = {
+        "recurrences": bench_recurrences.run,   # Table III
+        "mapping": bench_mapping.run,           # Table IV + routing
+        "scaling": bench_scaling.run,           # Fig. 6
+        "kernels": bench_kernels.run,
+        "roofline": roofline_table.run,         # EXPERIMENTS §Roofline
+    }
+    csv_rows: list = []
+    for name, fn in sections.items():
+        if only and name not in only:
+            continue
+        try:
+            fn(csv_rows)
+        except Exception as e:  # noqa: BLE001
+            print(f"[bench {name}] FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

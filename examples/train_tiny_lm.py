@@ -1,0 +1,49 @@
+"""End-to-end driver: train a ~100M-param qwen-style LM for 300 steps.
+
+Exercises the full production stack on CPU: data pipeline -> model ->
+AdamW -> checkpointing (async, atomic) -> restart -> straggler watchdog.
+Loss decreases on the synthetic Markov stream.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import os
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.train import Trainer, TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default="/tmp/widesa_tiny_lm")
+    args = ap.parse_args()
+
+    # ~100M params: shrink qwen1.5-0.5b (keeps arch features: QKV bias,
+    # tied embeddings)
+    cfg = get_config("qwen1.5-0.5b")
+    cfg = dataclasses.replace(
+        cfg, n_layers=8, d_model=768, n_heads=12, n_kv_heads=12, d_ff=2304,
+        vocab=32000, remat="none", dtype="float32")
+    print(f"model: {cfg.param_count()/1e6:.1f}M params")
+
+    shape = ShapeSpec("tiny", "train", seq_len=128, global_batch=4)
+    tcfg = TrainConfig(base_lr=3e-4, warmup=20, total_steps=args.steps,
+                       ckpt_every=100, log_every=10)
+    trainer = Trainer(cfg, shape, ckpt_dir=args.ckpt, tcfg=tcfg)
+    trainer.install_signal_handlers()
+    params, _, hist = trainer.run(args.steps, resume=True)
+
+    first = sum(hist[:10]) / max(len(hist[:10]), 1)
+    last = sum(hist[-10:]) / max(len(hist[-10:]), 1)
+    print(f"\nloss: first-10 avg {first:.4f} -> last-10 avg {last:.4f}")
+    print(f"straggler events: {trainer.straggler_events}")
+    assert last < first, "loss must decrease"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

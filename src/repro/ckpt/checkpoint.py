@@ -1,0 +1,147 @@
+"""Sharded checkpointing with atomic manifest commit + async writes.
+
+Layout:  <dir>/step_<N>/
+            manifest.json       tree structure, shapes, dtypes, step
+            leaf_<i>.npy        one file per pytree leaf
+
+Crash safety: leaves are written into ``step_<N>.tmp`` and the directory is
+renamed last — a checkpoint either exists completely or not at all.
+Restore rebuilds arrays and (under a mesh) device_puts them against the
+target shardings, so restoring onto a *different* mesh reshards
+transparently (the elastic-restart path).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = _flatten_with_paths(tree)
+    meta = {"step": step, "treedef": str(treedef), "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        dtype_str = str(arr.dtype)
+        shape = list(arr.shape)
+        if arr.dtype.kind not in "biufc":
+            # non-native dtypes (bfloat16, fp8, ...) round-trip as raw bytes
+            arr = arr.view(np.uint8).reshape(arr.shape + (arr.itemsize,))
+        np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
+        meta["leaves"].append({"shape": shape, "dtype": dtype_str})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like_tree,
+                       shardings=None):
+    """Restore into the structure of ``like_tree`` (shapes must match).
+
+    ``shardings``: optional pytree of NamedSharding — arrays are placed
+    against them (resharding on a different mesh happens here).
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    leaves, treedef = _flatten_with_paths(like_tree)
+    with open(os.path.join(path, "manifest.json")) as f:
+        meta = json.load(f)
+    if len(meta["leaves"]) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(meta['leaves'])} leaves, "
+            f"expected {len(leaves)}")
+    out = []
+    shard_leaves = (
+        treedef.flatten_up_to(shardings) if shardings is not None
+        else [None] * len(leaves)
+    )
+    for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
+        arr = np.load(os.path.join(path, f"leaf_{i}.npy"))
+        want = np.dtype(meta["leaves"][i]["dtype"])
+        if arr.dtype == np.uint8 and arr.dtype != want:
+            arr = arr.reshape(arr.shape[:-1] + (-1,)).view(want)
+            arr = arr.reshape(tuple(meta["leaves"][i]["shape"]))
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {arr.shape} != {ref.shape}")
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return treedef.unflatten(out)
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a worker thread; ``wait()`` to drain.
+
+    Arrays are device_get'd on the caller thread (cheap on CPU, and on TPU
+    it snapshots before the next step mutates the buffers), then written on
+    the worker.
+    """
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        self._pending: list[concurrent.futures.Future] = []
+
+    def save(self, step: int, tree):
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        fut = self._pool.submit(self._do_save, step, host_tree)
+        self._pending.append(fut)
+        return fut
+
+    def _do_save(self, step, host_tree):
+        path = save_checkpoint(self.directory, step, host_tree)
+        self._gc()
+        return path
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:08d}"),
+                ignore_errors=True)
+
+    def wait(self):
+        for f in self._pending:
+            f.result()
+        self._pending.clear()
+
+    def close(self):
+        self.wait()
+        self._pool.shutdown()

@@ -1,0 +1,42 @@
+"""Config registry: get_config(arch_id) and get_smoke_config(arch_id)."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from .base import LONG_CONTEXT_ARCHS, SHAPES, ModelConfig, ShapeSpec, cells_for
+
+_ARCH_MODULES = {
+    "mamba2-780m": "mamba2_780m",
+    "whisper-base": "whisper_base",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "stablelm-12b": "stablelm_12b",
+    "qwen1.5-0.5b": "qwen15_05b",
+    "qwen3-32b": "qwen3_32b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "zamba2-1.2b": "zamba2_12b",
+    "widesa-paper": "widesa_paper",
+}
+
+ARCHS = [a for a in _ARCH_MODULES if a != "widesa-paper"]
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(
+        f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(
+        f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.SMOKE
+
+
+__all__ = [
+    "ARCHS", "SHAPES", "LONG_CONTEXT_ARCHS", "ModelConfig", "ShapeSpec",
+    "cells_for", "get_config", "get_smoke_config",
+]

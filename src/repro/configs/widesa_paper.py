@@ -1,0 +1,10 @@
+"""The paper's own benchmark suite (Table II) as a pseudo-config.
+
+Not an LM — used by benchmarks/bench_recurrences.py to drive the mapper
+over the exact problem sizes and dtypes of the paper.
+"""
+
+from repro.core.recurrence import PAPER_BENCHMARKS
+
+CONFIG = PAPER_BENCHMARKS
+SMOKE = PAPER_BENCHMARKS

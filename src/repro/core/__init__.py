@@ -1,0 +1,43 @@
+"""WideSA core: polyhedral-style systolic mapping for uniform recurrences.
+
+Pipeline (paper §III-IV):
+    recurrence.py  — uniform-recurrence IR + paper benchmark builders
+    spacetime.py   — space-time transformation (space/time loop selection)
+    partition.py   — array partition + latency hiding + multiple threading
+    plio.py        — mapped graph, congestion model, Algorithm 1
+    mapper.py      — search + cost model -> ExecutionPlan
+    codegen.py     — ExecutionPlan -> JAX callable (pallas/xla/systolic)
+    roofline.py    — 3-term roofline from compiled HLO
+"""
+
+from .recurrence import (
+    Access,
+    Dependence,
+    UniformRecurrence,
+    conv2d,
+    fft2d_stage,
+    fir,
+    matmul,
+)
+from .spacetime import SystolicSchedule, enumerate_schedules
+from .partition import Partition, partition_schedule
+from .plio import (
+    MappedGraph,
+    assign_plios,
+    build_mapped_graph,
+    congestion,
+    is_feasible,
+)
+from .mapper import AIE_TARGET, ExecutionPlan, Target, best_plan, map_recurrence
+from .codegen import lower_plan
+
+__all__ = [
+    "Access", "Dependence", "UniformRecurrence",
+    "matmul", "conv2d", "fir", "fft2d_stage",
+    "SystolicSchedule", "enumerate_schedules",
+    "Partition", "partition_schedule",
+    "MappedGraph", "build_mapped_graph", "assign_plios", "congestion",
+    "is_feasible",
+    "Target", "AIE_TARGET", "ExecutionPlan", "map_recurrence", "best_plan",
+    "lower_plan",
+]

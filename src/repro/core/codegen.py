@@ -1,0 +1,210 @@
+"""ExecutionPlan -> executable JAX (paper §IV back half).
+
+Three backends:
+
+  'pallas'  — intra-chip Pallas kernel with the plan's BlockSpec tiles
+              (interpret=True on CPU; Mosaic on real TPU).
+  'xla'     — plain jnp reference path (used by the 512-device dry-run,
+              since Mosaic only lowers for TPU targets).
+  'systolic'— chip-level shard_map schedule: the plan's space loops become
+              mesh axes; flow/read dependences lower to lax.ppermute rings
+              (the AIE-DMA neighbour stream analogue), output dependences to
+              psum_scatter.  This is the paper's systolic design at pod
+              scale and the baseline for the §Perf collective hillclimb.
+
+Only recurrences from core.recurrence's builders are supported — which is
+exactly the paper's benchmark set plus the model matmuls.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .mapper import ExecutionPlan
+
+
+# ---------------------------------------------------------------------------
+# backend: xla (oracle / dry-run path)
+# ---------------------------------------------------------------------------
+
+def _xla_fn(plan: ExecutionPlan) -> Callable:
+    name = plan.recurrence.name
+    if name in ("mm", "fft2d_stage"):
+        def mm(a, b):
+            acc = jnp.promote_types(a.dtype, jnp.int32) if (
+                jnp.issubdtype(a.dtype, jnp.integer)) else jnp.float32
+            return jax.lax.dot(a, b, preferred_element_type=acc).astype(
+                _out_dtype(a.dtype))
+        return mm
+    if name == "conv2d":
+        def conv(img, filt):
+            acc = jnp.float32 if not jnp.issubdtype(
+                img.dtype, jnp.integer) else jnp.int32
+            out = jax.lax.conv_general_dilated(
+                img[None, None].astype(acc),
+                filt[None, None].astype(acc),
+                window_strides=(1, 1),
+                padding="VALID",
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            )[0, 0]
+            return out.astype(_out_dtype(img.dtype))
+        return conv
+    if name == "fir":
+        def fir(x, h):
+            acc = jnp.float32 if not jnp.issubdtype(
+                x.dtype, jnp.integer) else jnp.int32
+            taps = h.shape[0]
+            out = jnp.zeros(x.shape[0] - taps + 1, dtype=acc)
+            for t in range(taps):
+                out = out + x[t : t + out.shape[0]].astype(acc) * h[t].astype(acc)
+            return out.astype(_out_dtype(x.dtype))
+        return fir
+    raise NotImplementedError(name)
+
+
+def _out_dtype(in_dtype):
+    if jnp.issubdtype(in_dtype, jnp.integer):
+        return jnp.int32
+    return in_dtype
+
+
+# ---------------------------------------------------------------------------
+# backend: pallas (per-chip kernel with the plan's tiles)
+# ---------------------------------------------------------------------------
+
+def _pallas_fn(plan: ExecutionPlan, interpret: bool = True) -> Callable:
+    from repro.kernels import ops as kops
+
+    rec = plan.recurrence
+    blk = plan.partition.block
+    if rec.name in ("mm", "fft2d_stage"):
+        return functools.partial(
+            kops.matmul,
+            bm=blk.get("i", 128),
+            bn=blk.get("j", 128),
+            bk=blk.get("k", 128),
+            interpret=interpret,
+        )
+    if rec.name == "conv2d":
+        return functools.partial(
+            kops.conv2d,
+            bh=blk.get("h", 128),
+            bw=blk.get("w", 128),
+            interpret=interpret,
+        )
+    if rec.name == "fir":
+        return functools.partial(
+            kops.fir, bn=blk.get("n", 1024), interpret=interpret
+        )
+    raise NotImplementedError(rec.name)
+
+
+# ---------------------------------------------------------------------------
+# backend: systolic (chip-level shard_map schedule)
+# ---------------------------------------------------------------------------
+
+def _systolic_mm(plan: ExecutionPlan, mesh) -> Callable:
+    """Cannon-style systolic matmul over the plan's two space axes.
+
+    A is sharded (i->ax0, k->ax1); B is sharded (k->ax0, j->ax1); C comes out
+    sharded (i->ax0, j->ax1).  Each of the `steps` iterations multiplies the
+    local blocks then rotates A west / B north via ppermute — the direct
+    chip-level analogue of the paper's neighbour DMA streams, and it never
+    materializes a gathered operand (edge-bandwidth optimal).
+    """
+    ax0, ax1 = plan.axis_assignment.stream_axis.get("A"), None
+    axes = plan.target.mesh_axes
+    ax0, ax1 = axes[0], axes[1] if len(axes) > 1 else axes[0]
+    n0 = mesh.shape[ax0]
+    n1 = mesh.shape[ax1]
+    if n0 != n1:
+        raise ValueError("cannon schedule needs a square space array")
+    steps = n0
+
+    def local(a_blk, b_blk):
+        n = steps
+        # pre-skew with STATIC perms over the linearized (ax0, ax1) pair:
+        # A(i, k) -> A(i, (k+i) mod n) ; B(k, j) -> B((k+j) mod n, j)
+        skew_a = [(r * n + ((c + r) % n), r * n + c)
+                  for r in range(n) for c in range(n)]
+        skew_b = [(((r + c) % n) * n + c, r * n + c)
+                  for r in range(n) for c in range(n)]
+        a_blk = jax.lax.ppermute(a_blk, (ax0, ax1), skew_a)
+        b_blk = jax.lax.ppermute(b_blk, (ax0, ax1), skew_b)
+
+        def body(step, carry):
+            a, b, acc = carry
+            acc = acc + jnp.dot(
+                a, b, preferred_element_type=jnp.float32
+            )
+            a = jax.lax.ppermute(
+                a, ax1, [((c + 1) % steps, c) for c in range(steps)]
+            )
+            b = jax.lax.ppermute(
+                b, ax0, [((r + 1) % steps, r) for r in range(steps)]
+            )
+            return a, b, acc
+
+        m, k = a_blk.shape
+        n = b_blk.shape[1]
+        acc = jnp.zeros((m, n), jnp.float32)
+        a_blk, b_blk, acc = jax.lax.fori_loop(
+            0, steps, body, (a_blk, b_blk, acc)
+        )
+        return acc.astype(_out_dtype(a_blk.dtype))
+
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(ax0, ax1), P(ax0, ax1)),
+        out_specs=P(ax0, ax1),
+        check_vma=False,
+    )
+    return fn
+
+
+def _allgather_mm(plan: ExecutionPlan, mesh) -> Callable:
+    """GSPMD-style baseline: all-gather B's k-shards then one local dot.
+    Used as the 'unconstrained compiler' reference in §Perf."""
+    axes = plan.target.mesh_axes
+    ax0, ax1 = axes[0], axes[1] if len(axes) > 1 else axes[0]
+
+    def local(a_blk, b_blk):
+        b_full = jax.lax.all_gather(b_blk, ax0, axis=0, tiled=True)
+        a_full = jax.lax.all_gather(a_blk, ax1, axis=1, tiled=True)
+        return jnp.dot(a_full, b_full, preferred_element_type=jnp.float32
+                       ).astype(_out_dtype(a_blk.dtype))
+
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(ax0, ax1), P(ax0, ax1)),
+        out_specs=P(ax0, ax1),
+        check_vma=False,
+    )
+
+
+def lower_plan(
+    plan: ExecutionPlan,
+    backend: str = "xla",
+    mesh=None,
+    interpret: bool = True,
+) -> Callable:
+    if backend == "xla":
+        return _xla_fn(plan)
+    if backend == "pallas":
+        return _pallas_fn(plan, interpret=interpret)
+    if backend == "systolic":
+        assert mesh is not None
+        if plan.recurrence.name not in ("mm", "fft2d_stage"):
+            raise NotImplementedError("systolic backend: mm-family only")
+        return _systolic_mm(plan, mesh)
+    if backend == "allgather":
+        assert mesh is not None
+        return _allgather_mm(plan, mesh)
+    raise ValueError(f"unknown backend {backend}")

@@ -1,0 +1,190 @@
+"""Three-term roofline analysis from compiled XLA artifacts (DESIGN.md §7).
+
+The container is CPU-only; TPU v5e is the *target*.  We therefore derive the
+roofline terms structurally from the dry-run's compiled module:
+
+    compute    = HLO_FLOPs            / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes_accessed   / (chips * HBM_BW)
+    collective = collective_bytes     / (chips * ICI_BW)
+
+``compiled.cost_analysis()`` on an SPMD-partitioned module reports
+*per-device* flops/bytes (verified empirically: a 512-way sharded matmul
+reports global/512), so the per-chip terms divide by PEAK directly.
+Collective bytes are parsed from the optimized HLO text: we sum the result
+shapes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (all-reduce counted twice: ring reduce =
+2.(n-1)/n ~ 2x the payload).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9  # per-link; 2D torus: traffic modelled per the dominant link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\]")
+_COLL_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-op bytes from optimized HLO (per-device shapes).
+
+    Counts the *result* shapes of each collective instruction.  Start/done
+    pairs (async collectives) are counted once, on the -start op; all-reduce
+    weighted 2x (ring all-reduce moves ~2 payloads per device).
+    """
+    out: dict[str, int] = {op: 0 for op in _COLL_OPS}
+    counts: dict[str, int] = {op: 0 for op in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        rhs = line.split("=", 1)[1]
+        m = re.match(r"\s*((?:\([^)]*\))|(?:[a-z0-9_\[\],{}: ]+?))\s+"
+                     r"([a-z0-9-]+)\(", rhs)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op.removesuffix("-start")
+        if base not in _COLL_OPS or op.endswith("-done"):
+            continue
+        restype = m.group(1)
+        nbytes = sum(
+            _shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(restype)
+        )
+        weight = 2 if base == "all-reduce" else 1
+        out[base] += nbytes * weight
+        counts[base] += 1
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float            # 6*N*D (global, useful)
+    useful_ratio: float           # model_flops / (flops_per_chip*chips)
+    coll_breakdown: dict
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def roofline_fraction(self) -> float:
+        """How close the dominant term says we are to the compute roofline:
+        T_compute / T_bound (1.0 = compute-bound at peak)."""
+        if self.t_bound == 0:
+            return 0.0
+        return self.t_compute / self.t_bound
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "flops/chip": f"{self.flops_per_chip:.3e}",
+            "bytes/chip": f"{self.bytes_per_chip:.3e}",
+            "coll_bytes/chip": f"{self.coll_bytes_per_chip:.3e}",
+            "t_comp_s": f"{self.t_compute:.4e}",
+            "t_mem_s": f"{self.t_memory:.4e}",
+            "t_coll_s": f"{self.t_collective:.4e}",
+            "bound": self.bottleneck,
+            "useful": f"{self.useful_ratio:.3f}",
+            "roofline_frac": f"{self.roofline_fraction():.3f}",
+        }
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: dict,
+    hlo_text: str,
+    model_flops: float,
+    peak_flops: float = PEAK_FLOPS_BF16,
+) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    coll_total = float(sum(v for k, v in coll.items() if k != "_counts"))
+
+    t_comp = flops / peak_flops
+    t_mem = nbytes / HBM_BW
+    t_coll = coll_total / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)  # type: ignore[arg-type]
+    useful = model_flops / (flops * chips) if flops > 0 else 0.0
+    return Roofline(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_chip=flops,
+        bytes_per_chip=nbytes,
+        coll_bytes_per_chip=coll_total,
+        t_compute=t_comp,
+        t_memory=t_mem,
+        t_collective=t_coll,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=useful,
+        coll_breakdown=coll,
+    )
+
+
+def format_table(rows: list[Roofline]) -> str:
+    if not rows:
+        return "(empty)"
+    cols = list(rows[0].row().keys())
+    data = [list(r.row().values()) for r in rows]
+    widths = [
+        max(len(c), *(len(row[i]) if isinstance(row[i], str) else len(str(row[i]))
+                      for row in data))
+        for i, c in enumerate(cols)
+    ]
+    def fmt(vals):
+        return " | ".join(str(v).ljust(w) for v, w in zip(vals, widths))
+    lines = [fmt(cols), "-|-".join("-" * w for w in widths)]
+    lines += [fmt(row) for row in data]
+    return "\n".join(lines)

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+    widesa_mm.py  — systolic MM (the paper's flagship benchmark)
+    conv2d.py     — 2-D conv as stacked-window MM recurrence
+    fir.py        — FIR as stacked-window MM recurrence
+    fft2d.py      — 2-D FFT as four-step matmul stages (MXU-native)
+    ops.py        — jit'd public wrappers (staging layer / DMA analogue)
+    ref.py        — pure-jnp oracles
+
+All kernels validate in interpret=True mode on CPU; BlockSpecs are written
+for TPU VMEM/MXU geometry (see core/partition.py constants).
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

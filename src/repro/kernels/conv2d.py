@@ -1,0 +1,103 @@
+"""2-D convolution kernel (paper Table II, [h, w, p, q]).
+
+TPU adaptation (DESIGN.md §2): the paper's DMA-module constructor (§IV)
+reorganizes the input stream for the AIE array; here the staging layer
+(ops.conv2d) builds the shifted-window stack
+
+    S[p*Q + q, h, w] = I[h + p, w + q]
+
+so the convolution becomes the uniform MM recurrence
+
+    O[h, w] = sum_s  F_flat[s] * S[s, h, w]
+
+executed on the MXU as a (1 x PQ) @ (PQ x HW-tile) contraction per output
+block — the same systolic mapping the paper derives (conv's reduction loops
+p,q are the time loops; h,w are the space loops).  The kernel below consumes
+the stack with disjoint MXU-aligned blocks (no halo reads inside the
+kernel, exactly like AIE cores that only see DMA-fed local buffers).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def conv_kernel(s_ref, f_ref, o_ref, acc_ref):
+    """s_ref: (S, bh, bw) window stack block; f_ref: (S,) filter taps."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s = s_ref[...]
+    f = f_ref[...]
+    if jnp.issubdtype(s.dtype, jnp.integer):
+        s32 = s.astype(jnp.int32)
+        f32 = f.astype(jnp.int32)
+        acc_ref[...] += jnp.einsum(
+            "shw,s->hw", s32, f32, preferred_element_type=jnp.int32
+        )
+    else:
+        acc_ref[...] += jnp.einsum(
+            "shw,s->hw", s, f, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bh", "bw", "bs", "interpret", "out_dtype"),
+)
+def conv2d_stacked(
+    stack: jax.Array,
+    filt_flat: jax.Array,
+    *,
+    bh: int = 128,
+    bw: int = 128,
+    bs: int | None = None,
+    interpret: bool = True,
+    out_dtype=None,
+) -> jax.Array:
+    """O[h,w] = sum_s stack[s,h,w] * filt_flat[s].
+
+    ``stack``: (S, H, W) shifted windows; ``filt_flat``: (S,).
+    """
+    s, h, w = stack.shape
+    assert filt_flat.shape == (s,)
+    if bs is None:
+        bs = s
+    assert h % bh == 0 and w % bw == 0 and s % bs == 0
+    if out_dtype is None:
+        out_dtype = (
+            jnp.int32
+            if jnp.issubdtype(stack.dtype, jnp.integer)
+            else stack.dtype
+        )
+    acc_dtype = (
+        jnp.int32 if jnp.issubdtype(stack.dtype, jnp.integer) else jnp.float32
+    )
+
+    grid = (h // bh, w // bw, s // bs)
+    return pl.pallas_call(
+        conv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bh, bw), lambda i, j, l: (l, i, j)),
+            pl.BlockSpec((bs,), lambda i, j, l: (l,)),
+        ],
+        out_specs=pl.BlockSpec((bh, bw), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((h, w), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bh, bw), acc_dtype)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+    )(stack, filt_flat)

@@ -1,0 +1,73 @@
+"""FIR filter kernel (paper Table II, [n, taps]).
+
+Same staging-layer strategy as conv2d (the paper's DMA-module analogue):
+ops.fir builds the shifted stack S[t, n] = x[n + t], after which FIR is the
+uniform MM recurrence  y[n] = sum_t h[t] * S[t, n]  — a (1 x T) @ (T x bn)
+MXU contraction per block.  n is the space loop (mapped across blocks/PEs),
+t the time loop, exactly the paper's FIR mapping.
+
+Complex FIR (cfloat) is lowered by the ops wrapper to four real FIR passes
+(re*re - im*im, re*im + im*re) — the MXU-native equivalent of the AIE's
+native cfloat MAC (DESIGN.md §9.3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def fir_kernel(s_ref, h_ref, o_ref):
+    """s_ref: (T, bn) shifted stack; h_ref: (T, 1) taps -> o_ref: (bn,)."""
+    s = s_ref[...]
+    h = h_ref[...]
+    if jnp.issubdtype(s.dtype, jnp.integer):
+        acc = jnp.dot(
+            h.T.astype(jnp.int32), s.astype(jnp.int32),
+            preferred_element_type=jnp.int32,
+        )
+    else:
+        acc = jnp.dot(h.T, s, preferred_element_type=jnp.float32)
+    o_ref[...] = acc[0].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bn", "interpret", "out_dtype")
+)
+def fir_stacked(
+    stack: jax.Array,
+    taps: jax.Array,
+    *,
+    bn: int = 1024,
+    interpret: bool = True,
+    out_dtype=None,
+) -> jax.Array:
+    """y[n] = sum_t taps[t] * stack[t, n]."""
+    t, n = stack.shape
+    assert taps.shape == (t,)
+    assert n % bn == 0, (n, bn)
+    if out_dtype is None:
+        out_dtype = (
+            jnp.int32
+            if jnp.issubdtype(stack.dtype, jnp.integer)
+            else stack.dtype
+        )
+    grid = (n // bn,)
+    return pl.pallas_call(
+        fir_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, bn), lambda i: (0, i)),
+            pl.BlockSpec((t, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), out_dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+    )(stack, taps.reshape(t, 1))

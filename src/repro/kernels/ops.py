@@ -1,0 +1,119 @@
+"""Public jit'd wrappers for the WideSA kernels.
+
+Each wrapper owns the staging-layer data movement (the paper's PL DMA
+module, §IV): padding to tile multiples, shifted-window stacking for
+conv/fir, and complex lowering for FFT/complex FIR.  Model code calls these
+(`use_pallas=True` paths); the dry-run uses the XLA path since Mosaic only
+lowers on TPU targets — on CPU, kernels run under interpret=True.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import conv2d as _conv
+from . import fir as _fir
+from . import fft2d as _fft
+from . import widesa_mm as _mm
+
+
+def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = []
+    for dim, m in zip(x.shape, mults):
+        pads.append((0, (-dim) % m))
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """C = A @ B with automatic padding to the plan tiles."""
+    m, k = a.shape
+    _, n = b.shape
+    bm_, bn_, bk_ = min(bm, m) or 1, min(bn, n) or 1, min(bk, k) or 1
+    ap = _pad_to(a, (bm_, bk_))
+    bp = _pad_to(b, (bk_, bn_))
+    out = _mm.matmul(ap, bp, bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
+    return out[:m, :n]
+
+
+def conv2d(
+    img: jax.Array,
+    filt: jax.Array,
+    *,
+    bh: int = 128,
+    bw: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """VALID 2-D correlation via the shifted-window stack (DMA staging)."""
+    p, q = filt.shape
+    h, w = img.shape
+    oh, ow = h - p + 1, w - q + 1
+    stack = jnp.stack(
+        [img[i : i + oh, j : j + ow] for i in range(p) for j in range(q)]
+    )  # (p*q, oh, ow)
+    bh_, bw_ = min(bh, oh), min(bw, ow)
+    stack = _pad_to(stack, (1, bh_, bw_))
+    out = _conv.conv2d_stacked(
+        stack, filt.reshape(-1), bh=bh_, bw=bw_, interpret=interpret
+    )
+    return out[:oh, :ow]
+
+
+def fir(
+    x: jax.Array,
+    taps: jax.Array,
+    *,
+    bn: int = 1024,
+    interpret: bool = True,
+) -> jax.Array:
+    """VALID FIR via the shifted stack."""
+    t = taps.shape[0]
+    n_out = x.shape[0] - t + 1
+    stack = jnp.stack([x[i : i + n_out] for i in range(t)])  # (t, n_out)
+    bn_ = min(bn, n_out)
+    stack = _pad_to(stack, (1, bn_))
+    out = _fir.fir_stacked(stack, taps, bn=bn_, interpret=interpret)
+    return out[:n_out]
+
+
+def fir_complex(
+    x_re, x_im, h_re, h_im, *, bn: int = 1024, interpret: bool = True
+):
+    """cfloat FIR as four real passes (MXU-native complex lowering)."""
+    f = functools.partial(fir, bn=bn, interpret=interpret)
+    rr = f(x_re, h_re)
+    ii = f(x_im, h_im)
+    ri = f(x_re, h_im)
+    ir = f(x_im, h_re)
+    return rr - ii, ri + ir
+
+
+def fft2d(
+    x_re: jax.Array,
+    x_im: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    three_mult: bool = True,
+    interpret: bool = True,
+):
+    r, c = x_re.shape
+    bm_, bn_, bk_ = min(bm, r), min(bn, c), min(bk, r)
+    return _fft.fft2d(
+        x_re, x_im,
+        bm=bm_, bn=bn_, bk=bk_,
+        three_mult=three_mult, interpret=interpret,
+    )

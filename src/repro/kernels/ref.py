@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul(a, b):
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        return jnp.dot(
+            a.astype(jnp.int32), b.astype(jnp.int32),
+            preferred_element_type=jnp.int32,
+        )
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def conv2d(img, filt):
+    """VALID 2-D correlation: O[h,w] = sum_{p,q} I[h+p, w+q] F[p,q]."""
+    ph, pq = filt.shape
+    h, w = img.shape
+    oh, ow = h - ph + 1, w - pq + 1
+    if jnp.issubdtype(img.dtype, jnp.integer):
+        acc, big = jnp.int32, jnp.int32
+    else:
+        acc, big = jnp.float32, jnp.float32
+    out = jnp.zeros((oh, ow), acc)
+    for p in range(ph):
+        for q in range(pq):
+            out = out + img[p : p + oh, q : q + ow].astype(big) * filt[
+                p, q
+            ].astype(big)
+    return out
+
+
+def fir(x, h):
+    """y[n] = sum_t x[n+t] h[t] (VALID)."""
+    t = h.shape[0]
+    n_out = x.shape[0] - t + 1
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        acc = jnp.int32
+    else:
+        acc = jnp.float32
+    out = jnp.zeros((n_out,), acc)
+    for i in range(t):
+        out = out + x[i : i + n_out].astype(acc) * h[i].astype(acc)
+    return out
+
+
+def fir_complex(x_re, x_im, h_re, h_im):
+    rr = fir(x_re, h_re)
+    ii = fir(x_im, h_im)
+    ri = fir(x_re, h_im)
+    ir = fir(x_im, h_re)
+    return rr - ii, ri + ir
+
+
+def fft2d(x_re, x_im):
+    z = jnp.fft.fft2(x_re.astype(jnp.complex64) + 1j * x_im.astype(jnp.complex64))
+    return jnp.real(z), jnp.imag(z)

@@ -1,0 +1,101 @@
+"""WideSA systolic matmul — the flagship Pallas TPU kernel (paper's MM).
+
+The ExecutionPlan's kernel-scope tiles (N0, M0, K0) become the BlockSpec
+shapes; the latency-hiding accumulator (N2, M2) is the fp32/int32 VMEM
+scratch that stays resident across the K grid dimension (the systolic time
+loop), so the MXU pipeline never stalls on the accumulation carry — the
+direct analogue of the paper's §III-B3.
+
+Grid layout: (i, j, k) with k innermost ("arbitrary" — it revisits the same
+output block).  Mosaic double-buffers the A/B input blocks automatically
+(multiple-buffering == the paper's DMA ping-pong).
+
+Supported dtypes (paper Table II): float32, bfloat16 (accum f32), int8,
+int16 (accum int32).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _acc_dtype(dtype) -> jnp.dtype:
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.int32
+    return jnp.float32
+
+
+def mm_kernel(a_ref, b_ref, o_ref, acc_ref):
+    """One (N0, M0) output tile; K streams through the k grid dim."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    acc_t = acc_ref.dtype
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        # MXU int path: widen to int32 lanes (int8/int16 packed natively on
+        # real hardware; widening keeps interpret-mode exact)
+        acc_ref[...] += jnp.dot(
+            a.astype(jnp.int32), b.astype(jnp.int32),
+            preferred_element_type=jnp.int32,
+        )
+    else:
+        acc_ref[...] += jnp.dot(a, b, preferred_element_type=acc_t)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+)
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+    out_dtype=None,
+) -> jax.Array:
+    """C[m,n] = A[m,k] @ B[k,n] with WideSA plan tiles.
+
+    Shapes must be divisible by the tiles (the mapper guarantees this via
+    divisor-exact block selection; ops.matmul pads otherwise).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        (m, n, k), (bm, bn, bk))
+    if out_dtype is None:
+        out_dtype = _acc_dtype(a.dtype) if jnp.issubdtype(
+            a.dtype, jnp.integer) else a.dtype
+    acc_dtype = _acc_dtype(a.dtype)
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+    )(a, b)

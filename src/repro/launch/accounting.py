@@ -1,0 +1,141 @@
+"""FLOP/collective accounting corrections for scanned programs.
+
+XLA's ``cost_analysis`` counts a while-loop (lax.scan) body ONCE, not
+trip_count times (verified empirically — see EXPERIMENTS.md §Dry-run
+notes).  Three complementary mechanisms recover true per-step numbers:
+
+  1. small archs (ssm / hybrid / encdec) lower with ``scan_unroll=True`` —
+     the layer loop is fully unrolled, accounting is exact;
+  2. big archs (dense / moe / vlm) lower two PROBE programs with L=1 and
+     L=2 unrolled layers at the full global shapes; the delta is the exact
+     per-layer cost and   corrected = probe(1) + (L-1) * delta   (embed /
+     logits / optimizer overheads appear once in probe(1), per-layer
+     optimizer+remat costs ride the delta);
+  3. blockwise (flash) attention's inner chunk scans stay scans even when
+     layers unroll — their matmul flops are added analytically
+     (``attention_adjustment``), since unrolling nq*nk chunk bodies would
+     explode the HLO.
+
+Collective bytes get the same linear probe correction; blockwise scans
+contain no collectives.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.layers import BLOCKWISE_SEQ_THRESHOLD
+
+_COLL_KEYS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def probe_configs(cfg: ModelConfig) -> tuple[ModelConfig, ModelConfig,
+                                             int, int]:
+    """(probe_small, probe_big, L_small, L_real_scaling_count).
+
+    moe:    first_dense kept, moe layers 1 vs 2 — delta = one MoE layer.
+    hybrid: 1 vs 2 full segments (attn_every SSM blocks + 1 shared block),
+            remainder blocks kept in both probes — delta = one segment.
+    dense / vlm / ssm: layers 1 vs 2 — delta = one layer.
+    """
+    if cfg.family == "moe":
+        fd = min(cfg.moe_first_dense, 1)
+        small = dataclasses.replace(
+            cfg, n_layers=fd + 1, moe_first_dense=fd,
+            scan_unroll=True, logit_chunk=0)
+        big = dataclasses.replace(
+            cfg, n_layers=fd + 2, moe_first_dense=fd,
+            scan_unroll=True, logit_chunk=0)
+        scaling = (cfg.n_layers - cfg.moe_first_dense) - 1
+        return small, big, fd + 1, scaling
+    if cfg.family == "hybrid" and cfg.attn_every > 0:
+        every = cfg.attn_every
+        n_seg = cfg.n_layers // every
+        rem = cfg.n_layers - n_seg * every
+        small = dataclasses.replace(
+            cfg, n_layers=every + rem, scan_unroll=True, logit_chunk=0)
+        big = dataclasses.replace(
+            cfg, n_layers=2 * every + rem, scan_unroll=True,
+            logit_chunk=0)
+        return small, big, every + rem, n_seg - 1
+    small = dataclasses.replace(cfg, n_layers=1, scan_unroll=True,
+                                logit_chunk=0)
+    big = dataclasses.replace(cfg, n_layers=2, scan_unroll=True,
+                              logit_chunk=0)
+    return small, big, 1, cfg.n_layers - 1
+
+
+def combine_probe(cost1: dict, coll1: dict, cost2: dict, coll2: dict,
+                  scaling: int) -> tuple[float, float, dict]:
+    """corrected = probe1 + scaling * (probe2 - probe1)."""
+    f1, f2 = float(cost1.get("flops", 0)), float(cost2.get("flops", 0))
+    b1 = float(cost1.get("bytes accessed", 0))
+    b2 = float(cost2.get("bytes accessed", 0))
+    flops = f1 + scaling * max(f2 - f1, 0.0)
+    nbytes = b1 + scaling * max(b2 - b1, 0.0)
+    coll = {}
+    for k in _COLL_KEYS:
+        c1, c2 = float(coll1.get(k, 0)), float(coll2.get(k, 0))
+        coll[k] = c1 + scaling * max(c2 - c1, 0.0)
+    return flops, nbytes, coll
+
+
+# ---------------------------------------------------------------------------
+# analytic blockwise-attention adjustment (global flops, all layers)
+# ---------------------------------------------------------------------------
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return cfg.n_layers
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+    if cfg.family == "encdec":
+        return 0  # handled specially (enc self + dec self + cross)
+    return 0  # ssm
+
+
+def attention_adjustment(cfg: ModelConfig, shape: ShapeSpec,
+                         kind: str) -> float:
+    """Analytic flops of blockwise attention (einsum QK^T + PV), global,
+    summed over layers, with fwd/bwd/remat multipliers.  Returns 0 when
+    the sequence is short enough for the exact sdpa path."""
+    s = shape.seq_len
+    b = shape.global_batch
+    if kind == "decode":
+        return 0.0  # decode attention is unscanned, exact in HLO
+    if s <= BLOCKWISE_SEQ_THRESHOLD:
+        return 0.0
+
+    def one(sq, skv, h, dqk, dv, layers):
+        return 2.0 * b * h * sq * skv * (dqk + dv) * layers
+
+    if cfg.family == "encdec":
+        # encoder self (frames, short -> sdpa, exact), decoder self (s x s)
+        # + cross (s x frames)
+        fwd = one(s, s, cfg.n_heads, cfg.hd, cfg.hd, cfg.n_layers)
+        if max(s, cfg.enc_frames) > BLOCKWISE_SEQ_THRESHOLD:
+            fwd += one(s, cfg.enc_frames, cfg.n_heads, cfg.hd, cfg.hd,
+                       cfg.n_layers)
+    elif cfg.use_mla:
+        dqk = cfg.nope_head_dim + cfg.rope_head_dim
+        fwd = one(s, s, cfg.n_heads, dqk, cfg.v_head_dim,
+                  _attn_layers(cfg))
+    elif cfg.family == "ssm":
+        return 0.0
+    else:
+        fwd = one(s, s, cfg.n_heads, cfg.hd, cfg.hd, _attn_layers(cfg))
+
+    if kind == "train":
+        mult = 3.5 + (1.0 if cfg.remat == "full" else 0.0)
+    else:  # prefill
+        mult = 1.0
+    if cfg.causal_block_skip:
+        mult *= 0.5  # triangular schedule visits ~half the kv blocks
+    return fwd * mult

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant — importing this module never touches
+jax device state (the dry-run sets the 512-device XLA flag before any jax
+import; tests and benches see the real single device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_from_devices(devices, *, model_parallel: int = 16):
+    """Elastic path: build the largest (data, model) mesh from a live
+    device list (survivors after failures).  data = n // model_parallel."""
+    import numpy as np
+
+    n = len(devices)
+    model = model_parallel
+    while n % model and model > 1:
+        model //= 2
+    data = n // model
+    arr = np.asarray(devices[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))

@@ -1,0 +1,50 @@
+"""Serving launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+        --requests 16 --max-new 8 [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    args = ap.parse_args()
+
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.serve import ServeEngine
+
+    cfg = get_smoke_config(args.arch)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, max_slots=args.slots, max_seq=args.max_seq)
+    eng.load(params)
+
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        plen = int(rng.integers(4, 16))
+        eng.submit(rng.integers(0, cfg.vocab, plen),
+                   max_new_tokens=args.max_new)
+    t0 = time.perf_counter()
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in done)
+    print(f"served {len(done)} requests / {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: composable blocks + unified API for the 10 assigned archs."""
+
+from .model import ModelAPI, build_model
+
+__all__ = ["ModelAPI", "build_model"]

@@ -1,0 +1,289 @@
+"""Encoder-decoder transformer (whisper-base backbone).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings [B, frames, d].  Encoder: non-causal
+self-attention blocks (layernorm + classic GELU MLP, sinusoidal positions).
+Decoder: causal self-attention + cross-attention to the encoder output,
+learned positions.  use_rope=False for both.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from . import layers as L
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    return fn
+
+
+def _res_constrain(cfg, x):
+    if cfg.seq_parallel:
+        return constrain(x, "batch", "seq_sp", None)
+    return x
+
+
+def sinusoids(length: int, channels: int):
+    log_timescale = math.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    ang = jnp.arange(length)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def init_cross_attention(key, cfg):
+    # same projection structure as self-attention (kv from encoder states)
+    return L.init_attention(key, cfg)
+
+
+def init_enc_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg),
+        "attn": L.init_attention(k1, cfg),
+        "ln2": L.init_norm(cfg),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def init_dec_layer(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_norm(cfg),
+        "attn": L.init_attention(k1, cfg),
+        "ln_x": L.init_norm(cfg),
+        "xattn": init_cross_attention(k2, cfg),
+        "ln2": L.init_norm(cfg),
+        "mlp": L.init_mlp(k3, cfg),
+    }
+
+
+def init_params(key, cfg):
+    ks = jax.random.split(key, 6)
+    dt = L._dtype(cfg)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "enc_layers": jax.vmap(lambda k: init_enc_layer(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: init_dec_layer(k, cfg))(dec_keys),
+        "embed": (jax.random.normal(
+            ks[2], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02).astype(dt),
+        "pos_dec": (jax.random.normal(
+            ks[3], (cfg.max_positions, cfg.d_model),
+            jnp.float32) * 0.01).astype(dt),
+        "ln_enc": L.init_norm(cfg),
+        "ln_f": L.init_norm(cfg),
+    }
+
+
+def param_specs(cfg):
+    def stacked(base):
+        return jax.tree.map(
+            lambda ax: ("layers",) + ax, base,
+            is_leaf=lambda x: isinstance(x, tuple))
+
+    enc = {
+        "ln1": L.norm_specs(cfg), "attn": L.attention_specs(cfg),
+        "ln2": L.norm_specs(cfg), "mlp": L.mlp_specs(cfg),
+    }
+    dec = {
+        "ln1": L.norm_specs(cfg), "attn": L.attention_specs(cfg),
+        "ln_x": L.norm_specs(cfg), "xattn": L.attention_specs(cfg),
+        "ln2": L.norm_specs(cfg), "mlp": L.mlp_specs(cfg),
+    }
+    return {
+        "enc_layers": stacked(enc),
+        "dec_layers": stacked(dec),
+        "embed": ("vocab", "d_model"),
+        "pos_dec": (None, "d_model"),
+        "ln_enc": L.norm_specs(cfg),
+        "ln_f": L.norm_specs(cfg),
+    }
+
+
+def _cross_attend(p, cfg, x, enc_k, enc_v):
+    """x [B,Sq,d] queries against precomputed encoder K/V."""
+    b, sq, _ = x.shape
+    hq, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, sq, hq, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(hq, hd)
+    out = L.attention_core(q, enc_k, enc_v, causal=False)
+    return out.reshape(b, sq, hq * hd) @ p["wo"]
+
+
+def _enc_kv(p, cfg, enc_out):
+    b, s, _ = enc_out.shape
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    k = (enc_out @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (enc_out @ p["wv"]).reshape(b, s, hkv, hd)
+    if cfg.qkv_bias:
+        k = k + p["bk"].reshape(hkv, hd)
+        v = v + p["bv"].reshape(hkv, hd)
+    return k, v
+
+
+def encode(p, cfg, frames):
+    """frames: [B, F, d] stub embeddings -> encoder states."""
+    x = frames.astype(L._dtype(cfg))
+    x = x + sinusoids(x.shape[1], cfg.d_model).astype(x.dtype)
+    x = constrain(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln1"], cfg, x)
+        x = x + L.apply_attention(lp["attn"], cfg, h, positions,
+                                  causal=False)
+        h = L.apply_norm(lp["ln2"], cfg, x)
+        return _res_constrain(cfg, x + L.apply_mlp(lp["mlp"], cfg, h)), None
+
+    body = _maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, p["enc_layers"], unroll=cfg.scan_unroll)
+    return L.apply_norm(p["ln_enc"], cfg, x)
+
+
+def decode_train(p, cfg, tokens, enc_out):
+    """Teacher-forced decoder pass -> hidden states."""
+    b, s = tokens.shape
+    x = p["embed"][tokens].astype(L._dtype(cfg)) + p["pos_dec"][:s]
+    x = constrain(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln1"], cfg, x)
+        x = x + L.apply_attention(lp["attn"], cfg, h, positions, causal=True)
+        h = L.apply_norm(lp["ln_x"], cfg, x)
+        ek, ev = _enc_kv(lp["xattn"], cfg, enc_out)
+        x = x + _cross_attend(lp["xattn"], cfg, h, ek, ev)
+        h = L.apply_norm(lp["ln2"], cfg, x)
+        return _res_constrain(cfg, x + L.apply_mlp(lp["mlp"], cfg, h)), None
+
+    body = _maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, p["dec_layers"], unroll=cfg.scan_unroll)
+    return L.apply_norm(p["ln_f"], cfg, x)
+
+
+def loss_fn(p, cfg, batch):
+    """batch: frames [B,F,d], tokens [B,S], labels [B,S]."""
+    enc_out = encode(p, cfg, batch["frames"])
+    hidden = decode_train(p, cfg, batch["tokens"], enc_out)
+    logits = hidden @ p["embed"].T.astype(hidden.dtype)
+    logits = constrain(logits, "batch", None, "vocab")
+    labels = batch["labels"]
+    lbl = jnp.maximum(labels, 0)
+    mask = (labels >= 0).astype(jnp.float32)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+    return ((lse - picked) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch, max_seq, enc_frames=None, dtype=jnp.bfloat16):
+    nl = cfg.n_layers
+    f = enc_frames or cfg.enc_frames
+    return {
+        "k": jnp.zeros((nl, batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((nl, batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
+        "enc_k": jnp.zeros((nl, batch, f, cfg.n_kv_heads, cfg.hd), dtype),
+        "enc_v": jnp.zeros((nl, batch, f, cfg.n_kv_heads, cfg.hd), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_specs(cfg):
+    return {
+        "k": ("layers", "batch", None, "kv_heads", None),
+        "v": ("layers", "batch", None, "kv_heads", None),
+        "enc_k": ("layers", "batch", None, "kv_heads", None),
+        "enc_v": ("layers", "batch", None, "kv_heads", None),
+        "pos": ("batch",),
+    }
+
+
+def prefill(p, cfg, frames, tokens, max_seq, cache_dtype=jnp.bfloat16):
+    """Encode audio, precompute cross K/V, run the teacher-forced prompt."""
+    b, s = tokens.shape
+    enc_out = encode(p, cfg, frames)
+
+    def kv_body(_, lp):
+        ek, ev = _enc_kv(lp["xattn"], cfg, enc_out)
+        return None, (ek.astype(cache_dtype), ev.astype(cache_dtype))
+
+    _, (enc_k, enc_v) = jax.lax.scan(kv_body, None, p["dec_layers"],
+                                     unroll=cfg.scan_unroll)
+
+    x = p["embed"][tokens].astype(L._dtype(cfg)) + p["pos_dec"][:s]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, inp):
+        lp, ek, ev = inp
+        h = L.apply_norm(lp["ln1"], cfg, x)
+        q, k, v = L._qkv(lp["attn"], cfg, h, positions)
+        x = x + (L.attention_core(q, k, v, causal=True).reshape(b, s, -1)
+                 @ lp["attn"]["wo"])
+        h = L.apply_norm(lp["ln_x"], cfg, x)
+        x = x + _cross_attend(lp["xattn"], cfg, h, ek, ev)
+        h = L.apply_norm(lp["ln2"], cfg, x)
+        x = x + L.apply_mlp(lp["mlp"], cfg, h)
+        return x, (k.astype(cache_dtype), v.astype(cache_dtype))
+
+    x, (ks, vs) = jax.lax.scan(body, x, (p["dec_layers"], enc_k, enc_v),
+                               unroll=cfg.scan_unroll)
+    x = L.apply_norm(p["ln_f"], cfg, x)
+    logits = (x[:, -1:] @ p["embed"].T.astype(x.dtype))[:, 0]
+
+    cache = init_cache(cfg, b, max_seq, enc_k.shape[2], cache_dtype)
+    pad = [(0, 0)] * 5
+    pad[2] = (0, max_seq - s)
+    cache["k"] = jnp.pad(ks, pad)
+    cache["v"] = jnp.pad(vs, pad)
+    cache["enc_k"] = enc_k
+    cache["enc_v"] = enc_v
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    return logits, cache
+
+
+def decode_step(p, cfg, cache, tokens):
+    """tokens [B,1] -> (logits [B,V], cache)."""
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = p["embed"][tokens].astype(L._dtype(cfg))
+    x = x + jnp.take_along_axis(
+        p["pos_dec"][None].astype(x.dtype),
+        pos[:, None, None].astype(jnp.int32), axis=1)
+
+    def body(x, inp):
+        lp, ck, cv, ek, ev = inp
+        h = L.apply_norm(lp["ln1"], cfg, x)
+        attn, ck, cv = L.apply_attention_decode(lp["attn"], cfg, h, ck, cv,
+                                                pos)
+        x = x + attn
+        h = L.apply_norm(lp["ln_x"], cfg, x)
+        x = x + _cross_attend(lp["xattn"], cfg, h, ek, ev)
+        h = L.apply_norm(lp["ln2"], cfg, x)
+        x = x + L.apply_mlp(lp["mlp"], cfg, h)
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x,
+        (p["dec_layers"], cache["k"], cache["v"],
+         cache["enc_k"], cache["enc_v"]), unroll=cfg.scan_unroll)
+    x = L.apply_norm(p["ln_f"], cfg, x)
+    logits = (x @ p["embed"].T.astype(x.dtype))[:, 0]
+    new_cache = dict(cache, k=ks, v=vs, pos=pos + 1)
+    return logits, new_cache

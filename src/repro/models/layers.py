@@ -1,0 +1,411 @@
+"""Shared transformer layers: norms, rotary, GQA attention, GLU MLP.
+
+Pure-function style: ``init_*`` returns a params dict (+ a parallel tree of
+logical sharding axes from ``*_specs``), ``apply`` functions are pure.  All
+matmuls are the paper's MM recurrence; their chip-level sharding comes from
+parallel.sharding rules (the WideSA space-time mapping), and on real TPU the
+per-chip tiles route through kernels.widesa_mm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(
+        dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x, w, b, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+# ---------------------------------------------------------------------------
+# rotary embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta):
+    """x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 5)
+    dt = _dtype(cfg)
+    p = {
+        "wq": dense_init(ks[0], d, hq * hd, dt),
+        "wk": dense_init(ks[1], d, hkv * hd, dt),
+        "wv": dense_init(ks[2], d, hkv * hd, dt),
+        "wo": dense_init(ks[3], hq * hd, d, dt, scale=1.0 / math.sqrt(hq * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dt)
+        p["bk"] = jnp.zeros((hkv * hd,), dt)
+        p["bv"] = jnp.zeros((hkv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def attention_specs(cfg):
+    s = {
+        "wq": ("d_model", "heads"),
+        "wk": ("d_model", "kv_heads"),
+        "wv": ("d_model", "kv_heads"),
+        "wo": ("heads", "d_model"),
+    }
+    if cfg.qkv_bias:
+        s |= {"bq": ("heads",), "bk": ("kv_heads",), "bv": ("kv_heads",)}
+    if cfg.qk_norm:
+        s |= {"q_norm": (None,), "k_norm": (None,)}
+    return s
+
+
+def _qkv(p, cfg, x, positions):
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def sdpa(q, k, v, *, causal: bool, q_offset=None):
+    """q: [B,Sq,Hq,hd]; k/v: [B,Skv,Hkv,hd] (GQA broadcast)."""
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, hd)
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(hd)
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + (
+            q_offset if q_offset is not None else 0
+        )
+        kpos = jnp.arange(skv)[None, :]
+        mask = qpos >= kpos
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(b, sq, hq, hd)
+
+
+# threshold above which attention switches to the blockwise (flash-style)
+# path — S^2 logits at 32k would be terabytes
+BLOCKWISE_SEQ_THRESHOLD = 2048
+Q_CHUNK = 512
+K_CHUNK = 1024
+
+
+def blockwise_attention(q, k, v, *, causal: bool, scale=None,
+                        q_chunk=Q_CHUNK, k_chunk=K_CHUNK,
+                        block_skip: bool = False):
+    """Flash-style attention: scan over q chunks, inner scan over kv chunks
+    with an online softmax.  Never materializes more than
+    [B, H, q_chunk, k_chunk] logits.
+
+    q: [B,Sq,H,hd_qk]; k: [B,Skv,H,hd_qk]; v: [B,Skv,H,hd_v] — heads must
+    already be GQA-expanded (H == Hq) so the head axis shards over 'model'
+    regardless of the kv-head count.
+    """
+    b, sq, h, dqk = q.shape
+    skv = k.shape[1]
+    dv = v.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dqk)
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, skv)
+    pad_q = (-sq) % q_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    nq = q.shape[1] // q_chunk
+    pad_k = (-skv) % k_chunk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nk = k.shape[1] // k_chunk
+
+    # [nq, B, H, qc, d] layout for scan
+    qs = jnp.moveaxis(
+        q.reshape(b, nq, q_chunk, h, dqk), (1, 3), (0, 2))
+    ks = jnp.moveaxis(
+        k.reshape(b, nk, k_chunk, h, dqk), (1, 3), (0, 2))
+    vs = jnp.moveaxis(
+        v.reshape(b, nk, k_chunk, h, dv), (1, 3), (0, 2))
+
+    kv_valid = jnp.arange(k.shape[1]) < skv  # mask padded kv tail
+
+    def q_body(_, qi_qc):
+        qi, qc = qi_qc  # qc: [B,H,qck,dqk]
+        m0 = jnp.full((b, h, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, dv), jnp.float32)
+
+        def k_body(carry, ki_kc):
+            m, l, acc = carry
+            ki, kc, vc = ki_kc
+            s = jnp.einsum("bhqd,bhkd->bhqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = ki * k_chunk + jnp.arange(k_chunk)
+            valid = jax.lax.dynamic_slice_in_dim(
+                kv_valid, ki * k_chunk, k_chunk)
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)
+                mask = (qpos[:, None] >= kpos[None, :]) & valid[None, :]
+            else:
+                mask = jnp.broadcast_to(valid[None, :],
+                                        (q_chunk, k_chunk))
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vc.dtype), vc
+            ).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            k_body, (m0, l0, a0),
+            (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    if block_skip and causal:
+        # triangular schedule: q chunk qi only visits kv chunks containing
+        # any unmasked position (k_chunk-granular) — ~halves attention
+        # flops.  Unrolled over q chunks so each inner scan has a static
+        # trip count.
+        outs = []
+        for qi in range(nq):
+            hi = min(((qi + 1) * q_chunk + k_chunk - 1) // k_chunk, nk)
+            m0 = jnp.full((b, h, q_chunk), -1e30, jnp.float32)
+            l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+            a0 = jnp.zeros((b, h, q_chunk, dv), jnp.float32)
+
+            def k_body(carry, ki_kc, qi=qi):
+                m, l, acc = carry
+                ki, kc, vc = ki_kc
+                s_ = jnp.einsum("bhqd,bhkd->bhqk", qs[qi], kc,
+                                preferred_element_type=jnp.float32) * scale
+                kpos = ki * k_chunk + jnp.arange(k_chunk)
+                valid = jax.lax.dynamic_slice_in_dim(
+                    kv_valid, ki * k_chunk, k_chunk)
+                qpos = qi * q_chunk + jnp.arange(q_chunk)
+                mask = (qpos[:, None] >= kpos[None, :]) & valid[None, :]
+                s_ = jnp.where(mask[None, None], s_, -1e30)
+                m_new = jnp.maximum(m, s_.max(axis=-1))
+                pp = jnp.exp(s_ - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l = l * corr + pp.sum(axis=-1)
+                acc = acc * corr[..., None] + jnp.einsum(
+                    "bhqk,bhkd->bhqd", pp.astype(vc.dtype), vc
+                ).astype(jnp.float32)
+                return (m_new, l, acc), None
+
+            (m, l, acc), _ = jax.lax.scan(
+                k_body, (m0, l0, a0),
+                (jnp.arange(hi), ks[:hi], vs[:hi]))
+            outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+        outs = jnp.stack(outs)
+    else:
+        _, outs = jax.lax.scan(q_body, None, (jnp.arange(nq), qs))
+    # outs: [nq, B, H, qc, dv] -> [B, S, H, dv]
+    out = jnp.moveaxis(outs, (0, 2), (1, 3)).reshape(
+        b, nq * q_chunk, h, dv)
+    return out[:, :sq].astype(v.dtype)
+
+
+def gqa_expand(k, hq):
+    """[B,S,Hkv,hd] -> [B,S,Hq,hd] by group repetition (so the head axis
+    shards over 'model' even when Hkv doesn't divide the axis)."""
+    hkv = k.shape[2]
+    if hkv == hq:
+        return k
+    return jnp.repeat(k, hq // hkv, axis=2)
+
+
+def attention_core(q, k, v, *, causal: bool, q_offset=None,
+                   block_skip: bool = False):
+    """Pick direct vs blockwise by sequence length."""
+    sq, skv = q.shape[1], k.shape[1]
+    if max(sq, skv) <= BLOCKWISE_SEQ_THRESHOLD:
+        return sdpa(q, k, v, causal=causal, q_offset=q_offset)
+    hq = q.shape[2]
+    k = constrain(gqa_expand(k, hq), "batch", None, "heads", None)
+    v = constrain(gqa_expand(v, hq), "batch", None, "heads", None)
+    return blockwise_attention(q, k, v, causal=causal,
+                               block_skip=block_skip and causal)
+
+
+def apply_attention(p, cfg, x, positions, *, causal=True):
+    b, s, d = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    out = attention_core(q, k, v, causal=causal,
+                         block_skip=cfg.causal_block_skip)
+    out = out.reshape(b, s, cfg.n_heads * cfg.hd)
+    return out @ p["wo"]
+
+
+def apply_attention_decode(p, cfg, x, cache_k, cache_v, pos):
+    """One-token decode: x [B,1,d]; cache [B,S,Hkv,hd]; pos [B] int32.
+
+    Low-precision caches (fp8) are storage-only: reads upcast to the
+    compute dtype (bf16 math, fp8 HBM traffic — the serving pattern)."""
+    b = x.shape[0]
+    compute_dt = _dtype(cfg)
+    q, k, v = _qkv(p, cfg, x, pos[:, None])
+    # write new kv at pos
+    cache_k = jax.vmap(
+        lambda c, kk, pp: jax.lax.dynamic_update_slice(
+            c, kk.astype(c.dtype), (pp, 0, 0))
+    )(cache_k, k, pos)
+    cache_v = jax.vmap(
+        lambda c, vv, pp: jax.lax.dynamic_update_slice(
+            c, vv.astype(c.dtype), (pp, 0, 0))
+    )(cache_v, v, pos)
+    skv = cache_k.shape[1]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    group = hq // hkv
+    qg = q.reshape(b, 1, hkv, group, hd)
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, cache_k.astype(compute_dt),
+        preferred_element_type=jnp.float32,
+    ) / math.sqrt(hd)
+    kpos = jnp.arange(skv)[None, :]
+    mask = kpos <= pos[:, None]
+    logits = jnp.where(mask[:, None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(compute_dt)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, cache_v.astype(compute_dt))
+    out = out.reshape(b, 1, hq * hd)
+    return out @ p["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# GLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_ff=None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    p = {
+        "wu": dense_init(ks[1], d, ff, dt),
+        "wd": dense_init(ks[2], ff, d, dt, scale=1.0 / math.sqrt(ff)),
+    }
+    if cfg.mlp_glu:
+        p["wg"] = dense_init(ks[0], d, ff, dt)
+    else:
+        p["bu"] = jnp.zeros((ff,), dt)
+        p["bd"] = jnp.zeros((d,), dt)
+    return p
+
+
+def mlp_specs(cfg):
+    s = {
+        "wu": ("d_model", "ff"),
+        "wd": ("ff", "d_model"),
+    }
+    if cfg.mlp_glu:
+        s["wg"] = ("d_model", "ff")
+    else:
+        s |= {"bu": ("ff",), "bd": (None,)}
+    return s
+
+
+def apply_mlp(p, cfg, x):
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    if cfg.mlp_glu:
+        h = act(x @ p["wg"]) * (x @ p["wu"])
+    else:
+        h = act(x @ p["wu"] + p["bu"])
+    h = constrain(h, "batch", None, "ff")
+    out = h @ p["wd"]
+    if not cfg.mlp_glu:
+        out = out + p["bd"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# norm dispatch (rms | layer)
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg):
+    d = cfg.d_model
+    dt = _dtype(cfg)
+    if cfg.norm == "layer":
+        return {"w": jnp.ones((d,), dt), "b": jnp.zeros((d,), dt)}
+    return {"w": jnp.ones((d,), dt)}
+
+
+def norm_specs(cfg):
+    if cfg.norm == "layer":
+        return {"w": (None,), "b": (None,)}
+    return {"w": (None,)}
+
+
+def apply_norm(p, cfg, x):
+    if cfg.norm == "layer":
+        return layernorm(x, p["w"], p["b"], cfg.norm_eps)
+    return rmsnorm(x, p["w"], cfg.norm_eps)

@@ -1,0 +1,165 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — low-rank KV compression.
+
+Train/prefill expand the latent; decode runs the *absorbed* form against the
+compressed cache (c_kv + shared rope key per token), which is the MLA
+serving trick: per-token cache is (kv_lora_rank + rope_head_dim) elements
+instead of 2*H*hd.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from .layers import apply_rope, dense_init, rmsnorm, _dtype
+
+
+def init_mla(key, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    nope, rope, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    dt = _dtype(cfg)
+    p = {}
+    qh = h * (nope + rope)
+    if cfg.q_lora_rank:
+        p["wdq"] = dense_init(ks[0], d, cfg.q_lora_rank, dt)
+        p["q_norm"] = jnp.ones((cfg.q_lora_rank,), dt)
+        p["wuq"] = dense_init(ks[1], cfg.q_lora_rank, qh, dt)
+    else:
+        p["wq"] = dense_init(ks[1], d, qh, dt)
+    p["wdkv"] = dense_init(ks[2], d, cfg.kv_lora_rank, dt)
+    p["kv_norm"] = jnp.ones((cfg.kv_lora_rank,), dt)
+    p["wkr"] = dense_init(ks[3], d, rope, dt)
+    p["wuk"] = dense_init(ks[4], cfg.kv_lora_rank, h * nope, dt)
+    p["wuv"] = dense_init(ks[5], cfg.kv_lora_rank, h * vd, dt)
+    p["wo"] = dense_init(ks[6], h * vd, d, dt, scale=1.0 / math.sqrt(h * vd))
+    return p
+
+
+def mla_specs(cfg):
+    s = {
+        "wdkv": ("d_model", None),
+        "kv_norm": (None,),
+        "wkr": ("d_model", None),
+        "wuk": (None, "heads"),
+        "wuv": (None, "heads"),
+        "wo": ("heads", "d_model"),
+    }
+    if cfg.q_lora_rank:
+        s |= {"wdq": ("d_model", None), "q_norm": (None,),
+              "wuq": (None, "heads")}
+    else:
+        s |= {"wq": ("d_model", "heads")}
+    return s
+
+
+def _queries(p, cfg, x, positions):
+    b, s, _ = x.shape
+    h, nope, rope = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    if cfg.q_lora_rank:
+        cq = rmsnorm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+        q = cq @ p["wuq"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(b, s, h, nope + rope)
+    qn, qr = q[..., :nope], q[..., nope:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    return constrain(qn, "batch", None, "heads", None), constrain(
+        qr, "batch", None, "heads", None)
+
+
+def _latent(p, cfg, x, positions):
+    ckv = rmsnorm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)
+    kr = (x @ p["wkr"])[:, :, None, :]  # [B,S,1,rope] shared across heads
+    kr = apply_rope(kr, positions, cfg.rope_theta)
+    return ckv, kr[:, :, 0, :]
+
+
+def apply_mla(p, cfg, x, positions, *, causal=True):
+    """Training/prefill path: expand latent to per-head K/V.
+
+    Long sequences route through blockwise attention with the nope and
+    rope score terms fused by concatenating along the head dim:
+    q_cat = [qn ; qr], k_cat = [kn ; kr broadcast] so q_cat.k_cat equals
+    qn.kn + qr.kr — one flash pass instead of two logits tensors.
+    """
+    from .layers import BLOCKWISE_SEQ_THRESHOLD, blockwise_attention
+
+    b, s, _ = x.shape
+    h, nope, vd = cfg.n_heads, cfg.nope_head_dim, cfg.v_head_dim
+    rope = cfg.rope_head_dim
+    qn, qr = _queries(p, cfg, x, positions)
+    ckv, kr = _latent(p, cfg, x, positions)
+    kn = (ckv @ p["wuk"]).reshape(b, s, h, nope)
+    v = (ckv @ p["wuv"]).reshape(b, s, h, vd)
+    kn = constrain(kn, "batch", None, "heads", None)
+    v = constrain(v, "batch", None, "heads", None)
+    scale = 1.0 / math.sqrt(nope + rope)
+
+    if s > BLOCKWISE_SEQ_THRESHOLD:
+        q_cat = jnp.concatenate([qn, qr], axis=-1)
+        k_cat = jnp.concatenate(
+            [kn, jnp.broadcast_to(kr[:, :, None, :], (b, s, h, rope))],
+            axis=-1)
+        out = blockwise_attention(
+            q_cat, k_cat, v, causal=causal, scale=scale,
+            block_skip=cfg.causal_block_skip and causal)
+        out = out.reshape(b, s, h * vd)
+        return out @ p["wo"]
+
+    logits = (
+        jnp.einsum("bqhd,bkhd->bhqk", qn, kn,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhd,bkd->bhqk", qr, kr,
+                     preferred_element_type=jnp.float32)
+    ) * scale
+    if causal:
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(s)[None, :]
+        logits = jnp.where((qpos >= kpos)[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, s, h * vd)
+    return out @ p["wo"]
+
+
+def apply_mla_decode(p, cfg, x, cache_ckv, cache_kr, pos):
+    """Absorbed decode: score/readout in the compressed latent space.
+
+    cache_ckv: [B, S, kv_lora]; cache_kr: [B, S, rope]; pos: [B].
+    """
+    b = x.shape[0]
+    h, nope, vd = cfg.n_heads, cfg.nope_head_dim, cfg.v_head_dim
+    rope, kvl = cfg.rope_head_dim, cfg.kv_lora_rank
+    qn, qr = _queries(p, cfg, x, pos[:, None])  # [B,1,H,*]
+    ckv_new, kr_new = _latent(p, cfg, x, pos[:, None])
+    cache_ckv = jax.vmap(
+        lambda c, n, pp: jax.lax.dynamic_update_slice(
+            c, n.astype(c.dtype), (pp, 0))
+    )(cache_ckv, ckv_new, pos)
+    cache_kr = jax.vmap(
+        lambda c, n, pp: jax.lax.dynamic_update_slice(
+            c, n.astype(c.dtype), (pp, 0))
+    )(cache_kr, kr_new, pos)
+
+    # absorb W_uk into q:  q_abs[h, kvl] = qn[h] @ W_uk[h]^T
+    wuk = p["wuk"].reshape(kvl, h, nope)
+    q_abs = jnp.einsum("bqhd,lhd->bqhl", qn, wuk)  # [B,1,H,kvl]
+    scale = 1.0 / math.sqrt(nope + rope)
+    logits = (
+        jnp.einsum("bqhl,bkl->bhqk", q_abs, cache_ckv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhd,bkd->bhqk", qr, cache_kr,
+                     preferred_element_type=jnp.float32)
+    ) * scale
+    kpos = jnp.arange(cache_ckv.shape[1])[None, :]
+    mask = kpos <= pos[:, None]
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(cache_ckv.dtype)
+    out_lat = jnp.einsum("bhqk,bkl->bqhl", w, cache_ckv)  # [B,1,H,kvl]
+    wuv = p["wuv"].reshape(kvl, h, vd)
+    out = jnp.einsum("bqhl,lhd->bqhd", out_lat, wuv).reshape(b, 1, h * vd)
+    return out @ p["wo"], cache_ckv, cache_kr

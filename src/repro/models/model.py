@@ -1,0 +1,168 @@
+"""Unified model API over all families — the contract used by train/serve/
+dry-run.
+
+    api = build_model(cfg)
+    params = api.init(key)
+    loss   = api.loss(params, batch)
+    logits, cache = api.prefill(params, batch, max_seq)
+    logits, cache = api.decode(params, cache, tokens)
+
+``batch_specs(shape)`` returns ShapeDtypeStructs for every model input — the
+dry-run feeds these to jit.lower (no allocation), and the data pipeline
+materializes matching arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from . import encdec as ENCDEC
+from . import hybrid as HYBRID
+from . import transformer as TFM
+
+
+_CACHE_DTYPES = {
+    "bfloat16": jnp.bfloat16,
+    "float32": jnp.float32,
+    "float8_e4m3fn": jnp.float8_e4m3fn,
+}
+
+
+def cache_dtype_of(cfg) -> "jnp.dtype":
+    return _CACHE_DTYPES[cfg.kv_cache_dtype]
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    param_logical: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+    cache_logical: Callable
+    batch_specs: Callable
+    batch_logical: Callable
+
+
+def _token_batch_specs(cfg, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        s_text = s - cfg.vlm_patches
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+            "extra_embeds": jax.ShapeDtypeStruct(
+                (b, cfg.vlm_patches, cfg.d_model), jnp.bfloat16),
+        }
+    if cfg.family == "encdec":
+        return {
+            "frames": jax.ShapeDtypeStruct(
+                (b, cfg.enc_frames, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+
+
+def _token_batch_logical(cfg):
+    base = {
+        "tokens": ("batch", None),
+        "labels": ("batch", None),
+    }
+    if cfg.family == "vlm":
+        base["extra_embeds"] = ("batch", None, None)
+    if cfg.family == "encdec":
+        base["frames"] = ("batch", None, None)
+    return base
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family in ("dense", "moe", "vlm"):
+        def loss(p, batch):
+            return TFM.loss_fn(p, cfg, batch)
+
+        def prefill(p, batch, max_seq):
+            return TFM.prefill(
+                p, cfg, batch["tokens"], max_seq,
+                cache_dtype=cache_dtype_of(cfg),
+                extra_embeds=batch.get("extra_embeds"))
+
+        def decode(p, cache, tokens):
+            return TFM.decode_step(p, cfg, cache, tokens)
+
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: TFM.init_params(key, cfg),
+            param_logical=lambda: TFM.param_specs(cfg),
+            loss=loss,
+            prefill=prefill,
+            decode=decode,
+            init_cache=lambda b, s: TFM.init_cache(
+                cfg, b, s, cache_dtype_of(cfg)),
+            cache_logical=lambda: TFM.cache_specs(cfg),
+            batch_specs=lambda shape: _token_batch_specs(cfg, shape),
+            batch_logical=lambda: _token_batch_logical(cfg),
+        )
+
+    if cfg.family in ("ssm", "hybrid"):
+        def loss(p, batch):
+            return HYBRID.loss_fn(p, cfg, batch)
+
+        def prefill(p, batch, max_seq):
+            return HYBRID.prefill(p, cfg, batch["tokens"], max_seq,
+                                  cache_dtype=cache_dtype_of(cfg))
+
+        def decode(p, cache, tokens):
+            return HYBRID.decode_step(p, cfg, cache, tokens)
+
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: HYBRID.init_params(key, cfg),
+            param_logical=lambda: HYBRID.param_specs(cfg),
+            loss=loss,
+            prefill=prefill,
+            decode=decode,
+            init_cache=lambda b, s: HYBRID.init_cache(
+                cfg, b, s, cache_dtype_of(cfg)),
+            cache_logical=lambda: HYBRID.cache_specs(cfg),
+            batch_specs=lambda shape: _token_batch_specs(cfg, shape),
+            batch_logical=lambda: _token_batch_logical(cfg),
+        )
+
+    if cfg.family == "encdec":
+        def loss(p, batch):
+            return ENCDEC.loss_fn(p, cfg, batch)
+
+        def prefill(p, batch, max_seq):
+            return ENCDEC.prefill(
+                p, cfg, batch["frames"], batch["tokens"], max_seq,
+                cache_dtype=cache_dtype_of(cfg))
+
+        def decode(p, cache, tokens):
+            return ENCDEC.decode_step(p, cfg, cache, tokens)
+
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: ENCDEC.init_params(key, cfg),
+            param_logical=lambda: ENCDEC.param_specs(cfg),
+            loss=loss,
+            prefill=prefill,
+            decode=decode,
+            init_cache=lambda b, s: ENCDEC.init_cache(
+                cfg, b, s, dtype=cache_dtype_of(cfg)),
+            cache_logical=lambda: ENCDEC.cache_specs(cfg),
+            batch_specs=lambda shape: _token_batch_specs(cfg, shape),
+            batch_logical=lambda: _token_batch_logical(cfg),
+        )
+
+    raise ValueError(f"unknown family {cfg.family}")

@@ -1,0 +1,237 @@
+"""Mixture-of-Experts block: top-k routing, capacity, shared experts.
+
+Two execution paths, same routing math:
+
+  * baseline "TP-MoE" — experts sharded over the 'model' axis, tokens
+    replicated across it; every shard computes its local experts'
+    contribution and a psum combines.  Collective cost = one all-reduce of
+    activations per block, identical in shape to a dense-FFN TP all-reduce.
+    This is the GSPMD-friendly path used by train/prefill/decode alike.
+  * "EP a2a" — sequence-sharded dispatch with all_to_all to expert shards
+    (see parallel/collectives.py); enabled per-config, used by the §Perf
+    hillclimb to cut collective bytes (the WideSA congestion model picks
+    the axis).
+
+Routing: softmax -> top-k -> renormalize, capacity = ceil(T·k/E · cf) with
+drop-on-overflow (GShard-style), sort-based dispatch (no [T,E,C] one-hot).
+An auxiliary load-balance loss (Switch-style) is returned alongside.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from .layers import dense_init, _dtype
+
+
+def init_moe(key, cfg):
+    d, e, ff = cfg.d_model, cfg.moe_num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    dt = _dtype(cfg)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32, scale=0.02),
+        "wg": (jax.random.normal(ks[1], (e, d, ff), jnp.float32)
+               / math.sqrt(d)).astype(dt),
+        "wu": (jax.random.normal(ks[2], (e, d, ff), jnp.float32)
+               / math.sqrt(d)).astype(dt),
+        "wd": (jax.random.normal(ks[3], (e, ff, d), jnp.float32)
+               / math.sqrt(ff)).astype(dt),
+    }
+    if cfg.moe_shared_experts:
+        sf = cfg.moe_shared_experts * cfg.moe_d_ff
+        p["shared_wg"] = dense_init(ks[4], d, sf, dt)
+        p["shared_wu"] = dense_init(
+            jax.random.fold_in(ks[4], 1), d, sf, dt)
+        p["shared_wd"] = dense_init(
+            jax.random.fold_in(ks[4], 2), sf, d, dt,
+            scale=1.0 / math.sqrt(sf))
+    return p
+
+
+def moe_specs(cfg):
+    s = {
+        "router": ("d_model", None),
+        "wg": ("experts", "d_model", None),
+        "wu": ("experts", "d_model", None),
+        "wd": ("experts", None, "d_model"),
+    }
+    if cfg.moe_shared_experts:
+        s |= {
+            "shared_wg": ("d_model", "ff"),
+            "shared_wu": ("d_model", "ff"),
+            "shared_wd": ("ff", "d_model"),
+        }
+    return s
+
+
+def route(cfg, logits):
+    """softmax -> top-k -> renormalize.  logits: [T, E] (fp32)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, ids = jax.lax.top_k(probs, cfg.moe_top_k)  # [T, k]
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return weights, ids, probs
+
+
+def load_balance_loss(cfg, probs, ids):
+    """Switch-style aux loss: E * sum_e f_e * P_e.
+
+    probs: [..., E]; ids: [..., k] — leading axes are flattened.
+    """
+    e = cfg.moe_num_experts
+    one_hot = jax.nn.one_hot(ids.reshape(-1), e, dtype=jnp.float32)
+    counts = jnp.sum(one_hot, axis=0)
+    f = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    p_mean = jnp.mean(probs.reshape(-1, e), axis=0)
+    return e * jnp.sum(f * p_mean)
+
+
+def _dispatch_indices(cfg, ids, capacity):
+    """Sort-based dispatch: assignment -> (expert_slot, keep, token).
+
+    ids: [T, k].  Returns flat arrays over T*k assignments.
+    """
+    t, k = ids.shape
+    ids_flat = ids.reshape(-1)  # assignment a = t*k + j
+    order = jnp.argsort(ids_flat)  # stable: groups by expert
+    sorted_experts = ids_flat[order]
+    # rank within expert group
+    first_idx = jnp.searchsorted(
+        sorted_experts, sorted_experts, side="left"
+    )
+    rank = jnp.arange(t * k) - first_idx
+    keep = rank < capacity
+    slot = sorted_experts * capacity + jnp.minimum(rank, capacity - 1)
+    token = order // k
+    return order, slot, keep, token
+
+
+def _expert_ffn(cfg, wg, wu, wd, x):
+    """x: [E(_loc), C, d] -> [E(_loc), C, d]."""
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", x, wg)) * jnp.einsum(
+        "ecd,edf->ecf", x, wu
+    )
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def moe_ffn_tokens(cfg, p, x_flat, *, local_experts=None):
+    """Route + dispatch + expert FFN + combine for a flat token batch.
+
+    x_flat: [T, d].  ``local_experts``: (start, count) to restrict the
+    compute to an expert shard (TP-MoE path; contributions outside the
+    shard are zeroed and later psum'd).  Returns (y_flat, aux_loss).
+    """
+    t, d = x_flat.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    capacity = max(
+        1, int(math.ceil(t * k * cfg.moe_capacity_factor / e))
+    )
+    logits = x_flat.astype(jnp.float32) @ p["router"]
+    weights, ids, probs = route(cfg, logits)
+    aux = load_balance_loss(cfg, probs[None], ids[None])
+
+    order, slot, keep, token = _dispatch_indices(cfg, ids, capacity)
+    w_flat = weights.reshape(-1)[order]
+
+    if local_experts is not None:
+        start, count = local_experts
+        sorted_experts = slot // capacity
+        in_shard = (sorted_experts >= start) & (
+            sorted_experts < start + count
+        )
+        keep = keep & in_shard
+        slot = slot - start * capacity
+        slot = jnp.clip(slot, 0, count * capacity - 1)
+        n_exp = count
+    else:
+        n_exp = e
+
+    buf = jnp.zeros((n_exp * capacity, d), x_flat.dtype)
+    buf = buf.at[slot].add(
+        jnp.where(keep[:, None], x_flat[token], 0).astype(x_flat.dtype)
+    )
+    out_buf = _expert_ffn(
+        cfg, p["wg"], p["wu"], p["wd"], buf.reshape(n_exp, capacity, d)
+    ).reshape(n_exp * capacity, d)
+
+    contrib = out_buf[slot] * (
+        w_flat[:, None].astype(x_flat.dtype)
+    ) * keep[:, None].astype(x_flat.dtype)
+    y = jnp.zeros((t, d), x_flat.dtype).at[token].add(contrib)
+    return y, aux
+
+
+def _moe_shard_map(p, cfg, x, ctx):
+    """Explicit TP-MoE: tokens replicated over the expert ('model') axis,
+    each shard computes its local experts, psum combines.  Dispatch
+    scatters stay device-local (deterministic memory — a GSPMD scatter
+    over the expert buffer would replicate it)."""
+    from jax.sharding import PartitionSpec as P
+
+    mesh = ctx.mesh
+    exp_axis = ctx.rules.get("experts", "model")
+    batch_axis = ctx.rules.get("batch", "data")
+    n_exp_shards = (
+        mesh.shape[exp_axis] if exp_axis in mesh.shape else 1
+    )
+    e = cfg.moe_num_experts
+    e_loc = e // n_exp_shards
+
+    def local_fn(x_loc, router, wg, wu, wd):
+        b_loc, s, d = x_loc.shape
+        shard = jax.lax.axis_index(exp_axis)
+        pp = {"router": router, "wg": wg, "wu": wu, "wd": wd}
+        y, aux = moe_ffn_tokens(
+            cfg, pp, x_loc.reshape(b_loc * s, d),
+            local_experts=(shard * e_loc, e_loc),
+        )
+        y = jax.lax.psum(y, exp_axis)
+        aux = jax.lax.pmean(aux, exp_axis)
+        return y.reshape(b_loc, s, d), aux
+
+    fn = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(
+            P(batch_axis, None, None),
+            P(None, None),
+            P(exp_axis, None, None),
+            P(exp_axis, None, None),
+            P(exp_axis, None, None),
+        ),
+        out_specs=(P(batch_axis, None, None), P()),
+        check_vma=False,
+    )
+    return fn(x, p["router"], p["wg"], p["wu"], p["wd"])
+
+
+def apply_moe(p, cfg, x):
+    """MoE forward: x [B,S,d] -> [B,S,d], plus aux loss.
+
+    Under a mesh the TP-MoE shard_map path runs (experts sharded over the
+    'model' axis, one activation psum per block); on a single device the
+    plain dense path runs.  The EP all-to-all variant lives in
+    parallel/collectives.py and is switched in by the hillclimb configs.
+    """
+    from repro.parallel.sharding import current_mesh
+
+    b, s, d = x.shape
+    ctx = current_mesh()
+    if ctx is not None and ctx.mesh is not None and cfg.moe_ep:
+        from repro.parallel.collectives import moe_ep_alltoall
+        y, aux = moe_ep_alltoall(cfg, p, x, ctx)
+    elif ctx is not None and ctx.mesh is not None:
+        y, aux = _moe_shard_map(p, cfg, x, ctx)
+    else:
+        y, aux = moe_ffn_tokens(cfg, p, x.reshape(b * s, d))
+        y = y.reshape(b, s, d)
+    if cfg.moe_shared_experts:
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        h = act(x @ p["shared_wg"]) * (x @ p["shared_wu"])
+        h = constrain(h, "batch", None, "ff")
+        y = y + h @ p["shared_wd"]
+    return y, aux

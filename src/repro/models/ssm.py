@@ -1,0 +1,264 @@
+"""Mamba2 block via SSD (state-space duality), chunked form.
+
+The SSD chunked algorithm *is* a uniform recurrence in the chunk index
+(state_{c+1} = decay_c * state_c + B_c^T X_c), so the WideSA machinery maps
+it like the paper's FIR: chunks are the time loop, heads/state the space
+loops.  Intra-chunk terms are MM recurrences executed on the MXU.
+
+Layout: x [B, S, d_model]; d_inner = expand*d, nh = d_inner/headdim heads,
+state size N.  Single group (B/C shared across heads, n_groups=1).
+
+Train path: chunked scan (chunk Q = cfg.ssm_chunk).
+Decode path: O(1) recurrent step with (conv_state, ssm_state) carry.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from .layers import dense_init, rmsnorm, _dtype  # noqa: F401
+
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    dt = _dtype(cfg)
+
+    def conv_init(k, c):
+        return (jax.random.normal(k, (cfg.ssm_conv, c), jnp.float32)
+                / math.sqrt(cfg.ssm_conv)).astype(dt)
+
+    # UNPACKED projections (a hillclimb result — §Perf cell B): the fused
+    # in_proj's packed output slices at non-shard-aligned offsets, which
+    # forced GSPMD into per-block all-to-alls.  Separate matrices give
+    # every stream its natural sharding (x: 'model' features, B/C:
+    # replicated, dt: heads) with zero layout conversions.
+    return {
+        "z_proj": dense_init(ks[0], d, di, dt),
+        "x_proj": dense_init(ks[1], d, di, dt),
+        "b_proj": dense_init(ks[2], d, ns, dt),
+        "c_proj": dense_init(ks[3], d, ns, dt),
+        "dt_proj": dense_init(ks[4], d, nh, dt),
+        "conv_x": conv_init(ks[5], di),
+        "conv_bx": jnp.zeros((di,), dt),
+        "conv_bc": conv_init(ks[6], 2 * ns),
+        "conv_bc_bias": jnp.zeros((2 * ns,), dt),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)
+        ),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[7], di, d, dt, scale=1.0 / math.sqrt(di)),
+    }
+
+
+def mamba_specs(cfg):
+    return {
+        "z_proj": ("d_model", "ssm_heads"),
+        "x_proj": ("d_model", "ssm_heads"),
+        "b_proj": ("d_model", None),
+        "c_proj": ("d_model", None),
+        "dt_proj": ("d_model", "ssm_heads"),
+        "conv_x": (None, "ssm_heads"),
+        "conv_bx": ("ssm_heads",),
+        "conv_bc": (None, None),
+        "conv_bc_bias": (None,),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm": ("ssm_heads",),
+        "out_proj": ("ssm_heads", "d_model"),
+    }
+
+
+def _causal_conv(cfg, xbc, w, b):
+    """Depthwise causal conv along seq: xbc [B,S,C]."""
+    k = cfg.ssm_conv
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    s = xbc.shape[1]
+    for i in range(k):
+        out = out + pad[:, i : i + s, :].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _ssd_chunked(cfg, x, dt, b_ssm, c_ssm, a, ssm_state=None):
+    """SSD chunked scan.
+
+    x: [B,S,nh,hp]; dt: [B,S,nh]; b/c: [B,S,N]; a: [nh] (negative).
+    Returns y [B,S,nh,hp] and the final state [B,nh,hp,N].
+    """
+    bsz, s_in, nh, hp = x.shape
+    n = b_ssm.shape[-1]
+    q = min(cfg.ssm_chunk, s_in)
+    pad = (-s_in) % q
+    if pad:
+        # zero-pad the tail: dt=0 makes padded steps identity (decay=1,
+        # no input), so states and outputs are unaffected
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_ssm = jnp.pad(b_ssm, ((0, 0), (0, pad), (0, 0)))
+        c_ssm = jnp.pad(c_ssm, ((0, 0), (0, pad), (0, 0)))
+    s = s_in + pad
+    nc = s // q
+
+    xc = x.reshape(bsz, nc, q, nh, hp).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, nh)
+    bc = b_ssm.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c_ssm.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    da = dtc * a  # [B,nc,Q,nh]
+    cs = jnp.cumsum(da, axis=2)  # inclusive cumsum within chunk
+
+    # intra-chunk: y[q1] += sum_{q2<=q1} C[q1].B[q2] exp(cs[q1]-cs[q2]) dt[q2] x[q2]
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # [B,nc,q1,q2,nh]
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # double-where: the masked (future) branch has positive exponents that
+    # overflow in exp and poison gradients through the where
+    seg = jnp.where(mask, seg, 0.0)
+    decay = jnp.where(mask, jnp.exp(seg), 0.0)
+    decay = constrain(decay, "batch", None, None, None, "ssm_heads")
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # [B,nc,q1,q2]
+    scores = cb[..., None] * decay * dtc[:, :, None, :, :]  # [B,nc,q1,q2,nh]
+    scores = constrain(scores, "batch", None, None, None, "ssm_heads")
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xc)
+
+    # chunk-local end states: sum_q exp(cs[-1]-cs[q]) dt[q] B[q] (x) x[q]
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs)  # [B,nc,Q,nh]
+    local_state = jnp.einsum(
+        "bcqn,bcqh,bcqhp->bchpn", bc, decay_end * dtc, xc
+    )  # [B,nc,nh,hp,N]
+
+    # inter-chunk recurrence over chunks
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))  # [B,nc,nh]
+    if ssm_state is None:
+        ssm_state = jnp.zeros((bsz, nh, hp, n), jnp.float32)
+
+    def step(state, inputs):
+        dec, loc = inputs  # dec [B,nh], loc [B,nh,hp,N]
+        init = state  # state entering this chunk
+        new = state * dec[:, :, None, None] + loc
+        return new, init
+
+    chunk_decay_t = jnp.moveaxis(chunk_decay, 1, 0)  # [nc,B,nh]
+    local_state_t = jnp.moveaxis(local_state, 1, 0)  # [nc,B,nh,hp,N]
+    final_state, init_states = jax.lax.scan(
+        step, ssm_state, (chunk_decay_t, local_state_t)
+    )
+    init_states = jnp.moveaxis(init_states, 0, 1)  # [B,nc,nh,hp,N]
+
+    # inter-chunk contribution: y[q] += C[q] . (exp(cs[q]) * state_init)
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp", cc, jnp.exp(cs), init_states
+    )
+    y = (y_intra + y_inter).reshape(bsz, s, nh, hp)
+    return y[:, :s_in], final_state
+
+
+def apply_mamba(p, cfg, x, *, ssm_state=None, return_state=False,
+                return_cache=False):
+    """Full-sequence Mamba2 block. x: [B,S,d] -> [B,S,d].
+
+    ``return_cache`` additionally returns the raw-xbc conv tail (the
+    decode cache entry) — computed here so prefill does not re-run
+    in_proj outside the constrained region."""
+    bsz, s, d = x.shape
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_headdim
+    # unpacked projections: each stream lands in its natural sharding
+    # (batch on 'data' throughout; x/z/dt on 'model' features/heads; B/C
+    # replicated since they are shared across heads, n_groups=1) — see
+    # §Perf cell B for the packed-projection collective blow-up this fixes
+    z = constrain(x @ p["z_proj"], "batch", None, "ff")
+    x_part = constrain(x @ p["x_proj"], "batch", None, "ff")
+    bc_part = constrain(
+        jnp.concatenate([x @ p["b_proj"], x @ p["c_proj"]], axis=-1),
+        "batch", None, None)
+    dt_raw = constrain(x @ p["dt_proj"], "batch", None, "ssm_heads")
+
+    x_conv = _causal_conv(cfg, x_part, p["conv_x"], p["conv_bx"])
+    bc_conv = _causal_conv(cfg, bc_part, p["conv_bc"], p["conv_bc_bias"])
+    b_ssm = constrain(bc_conv[..., :ns], "batch", None, None)
+    c_ssm = constrain(bc_conv[..., ns:], "batch", None, None)
+    x_ssd = x_conv.reshape(bsz, s, nh, hp)
+    x_ssd = constrain(x_ssd, "batch", None, "ssm_heads", None)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"]
+    )  # [B,S,nh]
+    a = -jnp.exp(p["A_log"])  # [nh]
+
+    y, final_state = _ssd_chunked(cfg, x_ssd, dt, b_ssm, c_ssm, a, ssm_state)
+    y = y + x_ssd.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_cache:
+        conv_tail = jnp.concatenate(
+            [x_part, bc_part], axis=-1)[:, s - (cfg.ssm_conv - 1):, :]
+        return out, final_state, conv_tail
+    if return_state:
+        return out, final_state
+    return out
+
+
+def init_mamba_cache(cfg, batch, dtype=jnp.float32):
+    di, ns = cfg.d_inner, cfg.ssm_state
+    conv_dim = di + 2 * ns
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_headdim, ns), jnp.float32
+        ),
+    }
+
+
+def apply_mamba_step(p, cfg, x, cache):
+    """Single-token decode: x [B,1,d], cache {conv, ssm} -> (y, cache)."""
+    bsz = x.shape[0]
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_headdim
+    x0 = x[:, 0]
+    z = x0 @ p["z_proj"]
+    xbc = jnp.concatenate(
+        [x0 @ p["x_proj"], x0 @ p["b_proj"], x0 @ p["c_proj"]], axis=-1)
+    dt_raw = x0 @ p["dt_proj"]
+
+    # conv state update: window = [conv_state, xbc]
+    window = jnp.concatenate(
+        [cache["conv"], xbc[:, None, :]], axis=1
+    )  # [B,K,conv_dim]
+    w = jnp.concatenate(
+        [p["conv_x"], p["conv_bc"]], axis=-1).astype(jnp.float32)
+    bias = jnp.concatenate(
+        [p["conv_bx"], p["conv_bc_bias"]], axis=-1).astype(jnp.float32)
+    xbc_out = jnp.einsum(
+        "bkc,kc->bc", window.astype(jnp.float32), w
+    ) + bias
+    xbc_out = jax.nn.silu(xbc_out).astype(x.dtype)
+    new_conv = window[:, 1:, :]
+
+    x_ssd = xbc_out[..., :di].reshape(bsz, nh, hp).astype(jnp.float32)
+    b_ssm = xbc_out[..., di : di + ns].astype(jnp.float32)
+    c_ssm = xbc_out[..., di + ns :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,nh]
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)  # [B,nh]
+    new_ssm = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", b_ssm, dt, x_ssd
+    )
+    y = jnp.einsum("bn,bhpn->bhp", c_ssm, new_ssm)
+    y = y + x_ssd * p["D"][None, :, None]
+    y = y.reshape(bsz, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"conv": new_conv, "ssm": new_ssm}

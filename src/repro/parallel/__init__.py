@@ -1,0 +1,17 @@
+"""Distribution substrate: sharding rules, collectives, pipeline stage."""
+
+from .sharding import (
+    MeshCtx,
+    constrain,
+    current_mesh,
+    logical_to_sharding,
+    use_mesh_ctx,
+)
+
+__all__ = [
+    "MeshCtx",
+    "constrain",
+    "current_mesh",
+    "logical_to_sharding",
+    "use_mesh_ctx",
+]

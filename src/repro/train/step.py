@@ -1,0 +1,59 @@
+"""Shared train-step builder (Trainer + dry-run use the same code).
+
+Supports microbatched gradient accumulation (cfg.grad_accum > 1): the
+global batch is split into k microbatches scanned sequentially with fp32
+gradient accumulation — activation memory shrinks ~k x at the cost of one
+extra fp32 grad buffer (the standard fit lever for the biggest models,
+EXPERIMENTS.md §Perf memfit).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw_update, cosine_schedule
+
+
+def make_train_step(api, cfg, *, tcfg=None):
+    accum = max(getattr(cfg, "grad_accum", 1), 1)
+    lr_kwargs = {}
+    if tcfg is not None:
+        lr_kwargs = dict(base_lr=tcfg.base_lr, warmup=tcfg.warmup,
+                         total=tcfg.total_steps)
+
+    def loss_fn(params, batch):
+        return api.loss(params, batch)
+
+    def train_step(params, opt_state, batch, step):
+        if accum > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape(
+                    (accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+
+            def body(carry, mb):
+                tot, acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return (tot + l, acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        lr = cosine_schedule(step, **lr_kwargs)
+        params, opt_state, metrics = adamw_update(
+            grads, opt_state, params, lr=lr,
+            **({"weight_decay": tcfg.weight_decay,
+                "clip_norm": tcfg.clip_norm} if tcfg else {}))
+        metrics["loss"] = loss
+        metrics["lr"] = lr
+        return params, opt_state, metrics if tcfg else loss
+
+    return train_step

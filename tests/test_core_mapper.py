@@ -1,0 +1,96 @@
+"""End-to-end mapper + codegen tests."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    AIE_TARGET,
+    Target,
+    best_plan,
+    conv2d,
+    fir,
+    lower_plan,
+    map_recurrence,
+    matmul,
+)
+from repro.core.mapper import predict_bounds
+
+
+def test_plans_ranked_feasible_first():
+    plans = map_recurrence(matmul(1024, 1024, 1024), Target(), top_k=5)
+    assert plans
+    feas = [p.feasible for p in plans]
+    assert feas == sorted(feas, reverse=True)
+
+
+def test_paper_table3_within_bounds():
+    """Every paper Table III number must sit below the structural bound."""
+    paper = [
+        (matmul(8192, 8192, 8192, "float32"), 4.15),
+        (matmul(10240, 10240, 10240, "int8"), 32.49),
+        (matmul(9600, 9600, 9600, "int16"), 8.10),
+        (matmul(8192, 8192, 8192, "int32"), 3.92),
+        (conv2d(10240, 10240, 4, 4, "float32"), 4.50),
+        (conv2d(10240, 10240, 8, 8, "int8"), 36.02),
+        (fir(1048576, 15, "float32"), 2.92),
+        (fir(1048576, 15, "int8"), 39.3),
+        (fir(1048576, 15, "cfloat"), 2.89),
+    ]
+    for rec, achieved in paper:
+        plan = best_plan(rec, AIE_TARGET)
+        bound = predict_bounds(rec, plan.partition, AIE_TARGET)
+        assert achieved <= bound["array_level"] * 1.05, (
+            rec.name, rec.dtype, achieved, bound)
+
+
+def test_codegen_xla_matches_numpy():
+    rec = matmul(64, 96, 32)
+    plan = best_plan(rec, Target(mesh_shape=(2, 2)))
+    fn = lower_plan(plan, backend="xla")
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((64, 32)).astype(np.float32)
+    b = rng.standard_normal((32, 96)).astype(np.float32)
+    np.testing.assert_allclose(fn(jnp.asarray(a), jnp.asarray(b)), a @ b,
+                               atol=1e-4)
+
+
+def test_codegen_pallas_matches_xla():
+    rec = matmul(256, 256, 256)
+    plan = best_plan(rec, Target())
+    xla = lower_plan(plan, backend="xla")
+    pallas = lower_plan(plan, backend="pallas", interpret=True)
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(pallas(a, b)), np.asarray(xla(a, b)), atol=1e-3)
+
+
+def test_codegen_conv_fir():
+    rng = np.random.default_rng(2)
+    rec = conv2d(40, 40, 4, 4)
+    plan = best_plan(rec, Target(mesh_shape=(2, 2)))
+    fn = lower_plan(plan, backend="xla")
+    img = jnp.asarray(rng.standard_normal((40, 40)), jnp.float32)
+    filt = jnp.asarray(rng.standard_normal((4, 4)), jnp.float32)
+    out = fn(img, filt)
+    assert out.shape == (37, 37)
+
+    rec = fir(512, 15)
+    plan = best_plan(rec, Target(mesh_shape=(2, 2)))
+    fn = lower_plan(plan, backend="xla")
+    x = jnp.asarray(rng.standard_normal(512), jnp.float32)
+    h = jnp.asarray(rng.standard_normal(15), jnp.float32)
+    assert fn(x, h).shape == (498,)
+
+
+def test_predicted_utilization_high_for_mm():
+    plan = best_plan(matmul(8192, 8192, 8192), Target())
+    assert plan.predicted_utilization > 0.9
+
+
+def test_axis_assignment_balances_load():
+    plan = best_plan(matmul(4096, 4096, 4096), Target())
+    load = plan.axis_assignment.axis_load
+    assert set(load) == {"data", "model"}

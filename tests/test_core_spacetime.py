@@ -1,0 +1,87 @@
+"""Space-time transformation tests (paper §III-B)."""
+
+import pytest
+
+from repro.core import (
+    conv2d,
+    enumerate_schedules,
+    fir,
+    matmul,
+)
+from repro.core.spacetime import candidate_space_loops, parallel_time_loops
+
+
+def test_mm_dependences():
+    rec = matmul(64, 64, 64)
+    deps = {(d.array, d.kind): d.distance for d in rec.dependences()}
+    # A reused along j, B along i, C accumulates along k (paper §III-C1)
+    assert deps[("A", "read")] == (("j", 1),)
+    assert deps[("B", "read")] == (("i", 1),)
+    assert deps[("C", "output")] == (("k", 1),)
+
+
+def test_mm_candidate_space_loops():
+    rec = matmul(64, 64, 64)
+    assert set(candidate_space_loops(rec)) == {"i", "j", "k"}
+
+
+def test_mm_schedules_include_paper_choice():
+    """The paper's MM example picks (i, j) as space loops, k as time."""
+    rec = matmul(64, 64, 64)
+    scheds = enumerate_schedules(rec)
+    pairs = {(s.space_loops, s.time_loops) for s in scheds}
+    assert (("i", "j"), ("k",)) in pairs
+
+
+def test_mm_paper_comm_classes():
+    rec = matmul(64, 64, 64)
+    sched = next(
+        s for s in enumerate_schedules(rec)
+        if s.space_loops == ("i", "j")
+    )
+    comm = {(d.array): cls for d, cls in sched.comm}
+    # A and B stream through neighbours; C stays local (accumulates in PE)
+    assert comm["A"] == "neighbour"
+    assert comm["B"] == "neighbour"
+    assert comm["C"] == "local"
+
+
+def test_schedules_are_1d_or_2d_only():
+    rec = matmul(64, 64, 64)
+    for s in enumerate_schedules(rec):
+        assert s.ndim in (1, 2)  # paper: hardware shape constraint
+
+
+def test_schedules_need_time_loop():
+    rec = matmul(64, 64, 64)
+    for s in enumerate_schedules(rec):
+        assert len(s.time_loops) >= 1
+
+
+def test_conv_window_offsets_not_space():
+    """Conv reuse via window offsets: h,w carry offset-1 read deps."""
+    rec = conv2d(128, 128, 4, 4)
+    cands = candidate_space_loops(rec)
+    assert "h" in cands and "w" in cands
+
+
+def test_fir_parallel_time_loops():
+    rec = fir(1024, 15)
+    sched = next(
+        s for s in enumerate_schedules(rec) if s.space_loops == ("n",)
+    )
+    # t (reduction) has no flow dependence -> threading candidate
+    assert "t" in parallel_time_loops(rec, sched)
+
+
+def test_validate_rejects_bad_recurrence():
+    from repro.core.recurrence import Access, UniformRecurrence
+
+    with pytest.raises(ValueError):
+        UniformRecurrence(
+            name="bad",
+            loops=("i",),
+            extents=(4, 5),  # mismatch
+            accesses=(),
+            reduction_loops=frozenset(),
+        ).validate()

@@ -1,0 +1,123 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _mk(shape, dtype):
+    if dtype.startswith("int"):
+        return RNG.integers(-10, 10, shape).astype(dtype)
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul: dtype x shape sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,atol", [
+    ("float32", 1e-3), ("int8", 0), ("int16", 0),
+])
+@pytest.mark.parametrize("shape", [
+    (128, 128, 128), (192, 160, 136), (64, 256, 96), (33, 65, 17),
+])
+def test_matmul_sweep(dtype, atol, shape):
+    m, n, k = shape
+    a = jnp.asarray(_mk((m, k), dtype))
+    b = jnp.asarray(_mk((k, n), dtype))
+    out = ops.matmul(a, b, bm=64, bn=64, bk=64)
+    expect = ref.matmul(a, b)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float64), np.asarray(expect, np.float64),
+        atol=atol, rtol=1e-3)
+
+
+def test_matmul_bf16():
+    a = jnp.asarray(_mk((128, 96), "float32")).astype(jnp.bfloat16)
+    b = jnp.asarray(_mk((96, 64), "float32")).astype(jnp.bfloat16)
+    out = ops.matmul(a, b, bm=64, bn=64, bk=32)
+    expect = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect), atol=1.0,
+        rtol=2e-2)
+
+
+@pytest.mark.parametrize("tiles", [(32, 32, 32), (64, 32, 128),
+                                   (128, 128, 64)])
+def test_matmul_tile_sweep(tiles):
+    bm, bn, bk = tiles
+    a = jnp.asarray(_mk((256, 256), "float32"))
+    b = jnp.asarray(_mk((256, 256), "float32"))
+    out = ops.matmul(a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.matmul(a, b)), atol=1e-3,
+        rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "int8", "int16"])
+@pytest.mark.parametrize("hw,pq", [((70, 66), (4, 4)), ((40, 44), (8, 8)),
+                                   ((33, 37), (4, 4))])
+def test_conv2d_sweep(dtype, hw, pq):
+    img = jnp.asarray(_mk(hw, dtype))
+    filt = jnp.asarray(_mk(pq, dtype))
+    out = ops.conv2d(img, filt, bh=16, bw=16)
+    expect = ref.conv2d(img, filt)
+    atol = 0 if dtype.startswith("int") else 1e-3
+    np.testing.assert_allclose(
+        np.asarray(out, np.float64), np.asarray(expect, np.float64),
+        atol=atol, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fir
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "int8", "int16"])
+@pytest.mark.parametrize("n,taps", [(1000, 15), (512, 15), (257, 7)])
+def test_fir_sweep(dtype, n, taps):
+    x = jnp.asarray(_mk((n,), dtype))
+    h = jnp.asarray(_mk((taps,), dtype))
+    out = ops.fir(x, h, bn=128)
+    expect = ref.fir(x, h)
+    atol = 0 if dtype.startswith("int") else 1e-3
+    np.testing.assert_allclose(
+        np.asarray(out, np.float64), np.asarray(expect, np.float64),
+        atol=atol, rtol=1e-4)
+
+
+def test_fir_complex():
+    xs = [jnp.asarray(_mk((400,), "float32")) for _ in range(2)]
+    hs = [jnp.asarray(_mk((15,), "float32")) for _ in range(2)]
+    o_re, o_im = ops.fir_complex(xs[0], xs[1], hs[0], hs[1], bn=128)
+    e_re, e_im = ref.fir_complex(xs[0], xs[1], hs[0], hs[1])
+    np.testing.assert_allclose(np.asarray(o_re), np.asarray(e_re),
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(o_im), np.asarray(e_im),
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fft2d (four-step matmul form)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("three_mult", [True, False])
+@pytest.mark.parametrize("rc", [(64, 64), (128, 64), (32, 128)])
+def test_fft2d_sweep(rc, three_mult):
+    r, c = rc
+    xr = jnp.asarray(_mk((r, c), "float32"))
+    xi = jnp.asarray(_mk((r, c), "float32"))
+    o_re, o_im = ops.fft2d(xr, xi, bm=32, bn=32, bk=32,
+                           three_mult=three_mult)
+    e_re, e_im = ref.fft2d(xr, xi)
+    np.testing.assert_allclose(np.asarray(o_re), np.asarray(e_re),
+                               atol=0.5, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(o_im), np.asarray(e_im),
+                               atol=0.5, rtol=1e-3)

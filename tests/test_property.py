@@ -1,0 +1,128 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Target,
+    enumerate_schedules,
+    map_recurrence,
+    matmul,
+)
+from repro.core.partition import partition_schedule
+from repro.core.plio import assign_plios, build_mapped_graph, congestion
+from repro.kernels import ops, ref
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+@given(
+    n=st.integers(16, 512), m=st.integers(16, 512), k=st.integers(16, 512)
+)
+@SETTINGS
+def test_schedule_legality_invariant(n, m, k):
+    """Every enumerated schedule satisfies dependence legality: the time
+    part of each dependence is lexicographically non-negative."""
+    rec = matmul(n, m, k)
+    for sched in enumerate_schedules(rec):
+        for dep in rec.dependences():
+            tvec = [dep.dist(l) for l in sched.time_loops]
+            sign = next((1 if d > 0 else -1 for d in tvec if d != 0), 0)
+            assert sign >= 0
+
+
+@given(
+    rows=st.integers(2, 8), cols=st.integers(2, 16),
+    ppe=st.integers(1, 4),
+)
+@SETTINGS
+def test_plio_assignment_always_in_range(rows, cols, ppe):
+    rec = matmul(512, 512, 512)
+    sched = next(
+        s for s in enumerate_schedules(rec) if s.space_loops == ("i", "j")
+    )
+    g = build_mapped_graph(rec, sched, (rows, cols), ports_per_edge=ppe)
+    a = assign_plios(g, ports_per_col=max(4, len(g.ports) // cols + 1))
+    assert all(0 <= c < cols for c in a.values())
+
+
+@given(
+    rows=st.integers(2, 8), cols=st.integers(4, 16),
+)
+@SETTINGS
+def test_congestion_symmetry_bound(rows, cols):
+    """Total crossings are conserved: congestion counts never exceed the
+    number of (port, peer-column) pairs."""
+    rec = matmul(256, 256, 256)
+    sched = next(
+        s for s in enumerate_schedules(rec) if s.space_loops == ("i", "j")
+    )
+    g = build_mapped_graph(rec, sched, (rows, cols), ports_per_edge=2)
+    a = assign_plios(g, ports_per_col=len(g.ports))
+    west, east = congestion(g, a)
+    pairs = sum(len({c for _, c in p.peers}) for p in g.ports)
+    assert max(west) <= pairs and max(east) <= pairs
+
+
+@given(
+    n=st.integers(64, 2048),
+)
+@SETTINGS
+def test_partition_utilization_bounded(n):
+    rec = matmul(n, n, n)
+    for sched in enumerate_schedules(rec)[:3]:
+        for p in partition_schedule(rec, sched, (4, 4))[:3]:
+            assert 0.0 < p.utilization <= 1.0
+            assert p.vmem_bytes <= 16 * 2**20
+
+
+@given(
+    m=st.integers(8, 96), k=st.integers(8, 96), n=st.integers(8, 96),
+    bm=st.sampled_from([8, 16, 32, 64]),
+)
+@settings(max_examples=15, deadline=None)
+def test_kernel_matmul_property(m, k, n, bm):
+    """ops.matmul == oracle for arbitrary (padded) shapes and tiles."""
+    rng = np.random.default_rng(m * 31 + k * 7 + n)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    out = ops.matmul(a, b, bm=bm, bn=bm, bk=bm)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.matmul(a, b)), atol=1e-3,
+        rtol=1e-3)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_data_pipeline_deterministic(seed):
+    """Fault-tolerance contract: batch(step) is a pure function."""
+    from repro.configs import get_smoke_config
+    from repro.configs.base import ShapeSpec
+    from repro.data import SyntheticPipeline
+
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    shape = ShapeSpec("t", "train", 32, 4)
+    p1 = SyntheticPipeline(cfg, shape, seed=seed)
+    p2 = SyntheticPipeline(cfg, shape, seed=seed)
+    b1, b2 = p1.batch(7), p2.batch(7)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert np.array_equal(b1["labels"], b2["labels"])
+
+
+@given(
+    b=st.integers(1, 4), s=st.integers(2, 64), seed=st.integers(0, 99),
+)
+@settings(max_examples=10, deadline=None)
+def test_blockwise_attention_matches_sdpa(b, s, seed):
+    from repro.models.layers import blockwise_attention, sdpa
+
+    rng = np.random.default_rng(seed)
+    h, hd = 4, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    out = blockwise_attention(q, k, v, causal=True, q_chunk=16, k_chunk=16)
+    expect = sdpa(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-4, rtol=1e-3)
