@@ -1,8 +1,12 @@
-"""Kernel micro-bench: interpret-mode wall time vs jnp oracle on CPU.
+"""Kernel micro-bench: plan-driven interpret-mode wall time vs jnp oracle.
 
-These are correctness-path timings (Mosaic only lowers on real TPU);
-`derived` carries the oracle-relative slowdown so regressions in the
-kernel wrappers are visible.
+Every case runs end-to-end through the mapper: recurrence -> ExecutionPlan
+-> ``runtime.execute_plan`` — so these timings measure the mapping the
+framework actually picks (block shapes, dimension semantics), not
+hand-chosen tiles.  `derived` carries the oracle-relative slowdown so
+regressions in the plan-driven path are visible.  (Mosaic only lowers on
+real TPU; on CPU the kernels run interpreted, so treat these as
+correctness-path timings.)
 """
 
 from __future__ import annotations
@@ -12,7 +16,15 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from repro.kernels import ops, ref
+from repro.core import Target, best_plan
+from repro.core import conv2d as conv2d_rec
+from repro.core import fft2d_stage, fir as fir_rec, matmul as matmul_rec
+from repro.core.mapper import plan_cache_info
+from repro.kernels import execute_plan, ref
+
+# Single-chip target: the kernel-scope tiles (N0, M0, K0) of the plan are
+# exactly the Pallas blocks the bench executes with.
+CHIP = Target(name="single_chip", mesh_shape=(1, 1))
 
 
 def _time(fn, n=3):
@@ -24,7 +36,7 @@ def _time(fn, n=3):
 
 
 def run(csv_rows: list):
-    print("\n== kernel micro-bench (interpret mode, CPU) ==")
+    print("\n== kernel micro-bench (plan-driven, interpret mode, CPU) ==")
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
@@ -36,18 +48,30 @@ def run(csv_rows: list):
     xi = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
 
     cases = [
-        ("mm_512", lambda: ops.matmul(a, b, bm=128, bn=128, bk=128),
+        ("mm_512", matmul_rec(512, 512, 512), (a, b),
          lambda: ref.matmul(a, b)),
-        ("conv2d_256", lambda: ops.conv2d(img, filt, bh=64, bw=64),
+        # recurrence extents are the OUTPUT domain (253 = 256 - 4 + 1)
+        ("conv2d_256", conv2d_rec(253, 253, 4, 4), (img, filt),
          lambda: ref.conv2d(img, filt)),
-        ("fir_65536", lambda: ops.fir(x, h, bn=4096),
+        ("fir_65536", fir_rec(65522, 15), (x, h),
          lambda: ref.fir(x, h)),
-        ("fft2d_128", lambda: ops.fft2d(xr, xi, bm=64, bn=64, bk=64),
+        ("fft2d_128", fft2d_stage(128, 128), (xr, xi),
          lambda: ref.fft2d(xr, xi)),
     ]
-    for name, kfn, rfn in cases:
-        ku = _time(kfn)
+    for name, rec, operands, rfn in cases:
+        t0 = time.perf_counter()
+        plan = best_plan(rec, CHIP)
+        plan_us = (time.perf_counter() - t0) * 1e6
+        ku = _time(lambda: execute_plan(plan, *operands))
         ru = _time(rfn)
-        print(f"  {name:12s} kernel {ku:10.0f} us  oracle {ru:10.0f} us")
+        blk = plan.partition.block
+        print(f"  {name:12s} kernel {ku:10.0f} us  oracle {ru:10.0f} us  "
+              f"plan {plan_us:8.0f} us  blocks={blk}")
         csv_rows.append((f"kernel_{name}", ku,
-                         f"oracle_us={ru:.0f};slowdown={ku/max(ru,1):.1f}x"))
+                         f"oracle_us={ru:.0f};slowdown={ku/max(ru,1):.1f}x;"
+                         f"plan_us={plan_us:.0f}"))
+    ci = plan_cache_info()
+    print(f"  plan cache: hits={ci.hits} misses={ci.misses} "
+          f"size={ci.currsize}")
+    csv_rows.append(("kernel_plan_cache", float(ci.hits),
+                     f"misses={ci.misses};currsize={ci.currsize}"))

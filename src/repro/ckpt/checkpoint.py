@@ -94,6 +94,8 @@ def restore_checkpoint(directory: str, step: int, like_tree,
             raise ValueError(
                 f"leaf {i}: checkpoint shape {arr.shape} != {ref.shape}")
         if sh is not None:
+            if arr.dtype != ref.dtype:  # same cast as the unsharded branch
+                arr = arr.astype(ref.dtype)
             out.append(jax.device_put(arr, sh))
         else:
             out.append(jax.numpy.asarray(arr, dtype=ref.dtype))

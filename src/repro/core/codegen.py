@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
+
 from .mapper import ExecutionPlan
 
 
@@ -34,13 +36,21 @@ from .mapper import ExecutionPlan
 
 def _xla_fn(plan: ExecutionPlan) -> Callable:
     name = plan.recurrence.name
-    if name in ("mm", "fft2d_stage"):
+    if name == "mm":
         def mm(a, b):
             acc = jnp.promote_types(a.dtype, jnp.int32) if (
                 jnp.issubdtype(a.dtype, jnp.integer)) else jnp.float32
             return jax.lax.dot(a, b, preferred_element_type=acc).astype(
                 _out_dtype(a.dtype))
         return mm
+    if name == "fft2d_stage":
+        # operand convention matches the kernel runtime: (x_re, x_im) ->
+        # full 2-D DFT as two real planes (both MM stages of the plan)
+        def fft(x_re, x_im):
+            z = jnp.fft.fft2(
+                x_re.astype(jnp.complex64) + 1j * x_im.astype(jnp.complex64))
+            return jnp.real(z), jnp.imag(z)
+        return fft
     if name == "conv2d":
         def conv(img, filt):
             acc = jnp.float32 if not jnp.issubdtype(
@@ -68,40 +78,23 @@ def _xla_fn(plan: ExecutionPlan) -> Callable:
 
 
 def _out_dtype(in_dtype):
-    if jnp.issubdtype(in_dtype, jnp.integer):
-        return jnp.int32
-    return in_dtype
+    # single source of truth for the widening ladder (shared with kernels)
+    from repro.kernels import runtime
+
+    return runtime.out_dtype(in_dtype)
 
 
 # ---------------------------------------------------------------------------
 # backend: pallas (per-chip kernel with the plan's tiles)
 # ---------------------------------------------------------------------------
 
-def _pallas_fn(plan: ExecutionPlan, interpret: bool = True) -> Callable:
-    from repro.kernels import ops as kops
+def _pallas_fn(plan: ExecutionPlan, interpret: bool | None = None) -> Callable:
+    """Plan-driven kernel dispatch — the runtime derives block shapes, grid
+    and dimension semantics from the plan (see kernels/runtime.py)."""
+    from repro.kernels import runtime
 
-    rec = plan.recurrence
-    blk = plan.partition.block
-    if rec.name in ("mm", "fft2d_stage"):
-        return functools.partial(
-            kops.matmul,
-            bm=blk.get("i", 128),
-            bn=blk.get("j", 128),
-            bk=blk.get("k", 128),
-            interpret=interpret,
-        )
-    if rec.name == "conv2d":
-        return functools.partial(
-            kops.conv2d,
-            bh=blk.get("h", 128),
-            bw=blk.get("w", 128),
-            interpret=interpret,
-        )
-    if rec.name == "fir":
-        return functools.partial(
-            kops.fir, bn=blk.get("n", 1024), interpret=interpret
-        )
-    raise NotImplementedError(rec.name)
+    runtime.plan_kernel_kwargs(plan)  # fail fast on unsupported recurrences
+    return functools.partial(runtime.execute_plan, plan, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -158,12 +151,12 @@ def _systolic_mm(plan: ExecutionPlan, mesh) -> Callable:
         )
         return acc.astype(_out_dtype(a_blk.dtype))
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local,
         mesh=mesh,
         in_specs=(P(ax0, ax1), P(ax0, ax1)),
         out_specs=P(ax0, ax1),
-        check_vma=False,
+        check=False,
     )
     return fn
 
@@ -180,12 +173,12 @@ def _allgather_mm(plan: ExecutionPlan, mesh) -> Callable:
         return jnp.dot(a_full, b_full, preferred_element_type=jnp.float32
                        ).astype(_out_dtype(a_blk.dtype))
 
-    return jax.shard_map(
+    return _shard_map(
         local,
         mesh=mesh,
         in_specs=(P(ax0, ax1), P(ax0, ax1)),
         out_specs=P(ax0, ax1),
-        check_vma=False,
+        check=False,
     )
 
 
@@ -193,7 +186,7 @@ def lower_plan(
     plan: ExecutionPlan,
     backend: str = "xla",
     mesh=None,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> Callable:
     if backend == "xla":
         return _xla_fn(plan)
@@ -201,10 +194,14 @@ def lower_plan(
         return _pallas_fn(plan, interpret=interpret)
     if backend == "systolic":
         assert mesh is not None
-        if plan.recurrence.name not in ("mm", "fft2d_stage"):
-            raise NotImplementedError("systolic backend: mm-family only")
+        # fft2d_stage takes (x_re, x_im) operands everywhere else now; the
+        # cannon schedule is written for the plain (a, b) matmul contract.
+        if plan.recurrence.name != "mm":
+            raise NotImplementedError("systolic backend: mm only")
         return _systolic_mm(plan, mesh)
     if backend == "allgather":
         assert mesh is not None
+        if plan.recurrence.name != "mm":  # same (a, b) contract as systolic
+            raise NotImplementedError("allgather backend: mm only")
         return _allgather_mm(plan, mesh)
     raise ValueError(f"unknown backend {backend}")

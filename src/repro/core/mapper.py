@@ -7,12 +7,16 @@
 The ExecutionPlan is the contract with codegen: it pins the space/time
 mapping, the chip-array fold, the Pallas block shapes, the PLIO/axis
 assignment and the predicted roofline of the mapping.  Plans are
-deterministic for a given (recurrence, target) — the framework memoizes them.
+deterministic for a given (recurrence, target) — the framework memoizes
+them in an LRU cache keyed on (recurrence, target, ports_per_edge);
+see ``plan_cache_info``/``plan_cache_clear``.
 """
 
 from __future__ import annotations
 
+import copy
 import dataclasses
+import functools
 import math
 
 from . import partition as part
@@ -173,7 +177,28 @@ def map_recurrence(
     top_k: int = 5,
     ports_per_edge: int = 4,
 ) -> list[ExecutionPlan]:
-    """Run the full WideSA pipeline and return ranked feasible plans."""
+    """Run the full WideSA pipeline and return ranked feasible plans.
+
+    Results are memoized: the search is deterministic for a given
+    (recurrence, target) and both are frozen/hashable, so repeat mappings
+    (model layers re-planning the same matmul, benchmark loops, serving)
+    hit the LRU cache instead of re-running schedule enumeration + PLIO
+    assignment.  Plans contain mutable dicts (partition.block,
+    plio_assignment, axis loads), so each call returns deep copies — a
+    caller tweaking a plan can never corrupt the cache for everyone else.
+    """
+    # top_k only slices the ranked result, so it stays OUT of the cache key
+    # — different top_k values share one search.
+    ranked = _map_recurrence_cached(rec, target, ports_per_edge)
+    return copy.deepcopy(list(ranked[:top_k]))
+
+
+@functools.lru_cache(maxsize=256)
+def _map_recurrence_cached(
+    rec: UniformRecurrence,
+    target: Target,
+    ports_per_edge: int,
+) -> tuple[ExecutionPlan, ...]:
     plans: list[ExecutionPlan] = []
     for sched in enumerate_schedules(rec):
         parts = partition_schedule(
@@ -249,11 +274,17 @@ def map_recurrence(
             -pl.schedule.ndim,
         )
     )
-    return plans[:top_k]
+    return tuple(plans)
+
+
+#: Introspection over the plan cache (functools.lru_cache CacheInfo).
+plan_cache_info = _map_recurrence_cached.cache_info
+plan_cache_clear = _map_recurrence_cached.cache_clear
 
 
 def best_plan(rec: UniformRecurrence, target: Target = Target()) -> ExecutionPlan:
-    plans = map_recurrence(rec, target)
+    # top_k=1: a cache hit copies one plan, not the default five
+    plans = map_recurrence(rec, target, top_k=1)
     if not plans:
         raise RuntimeError(f"no feasible mapping for {rec.name}")
     return plans[0]

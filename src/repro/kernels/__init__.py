@@ -1,5 +1,7 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
+    runtime.py    — plan-driven runtime: version-portable Pallas compat
+                    shim + execute_plan(plan, *operands) dispatch
     widesa_mm.py  — systolic MM (the paper's flagship benchmark)
     conv2d.py     — 2-D conv as stacked-window MM recurrence
     fir.py        — FIR as stacked-window MM recurrence
@@ -11,6 +13,7 @@ All kernels validate in interpret=True mode on CPU; BlockSpecs are written
 for TPU VMEM/MXU geometry (see core/partition.py constants).
 """
 
-from . import ops, ref
+from . import ops, ref, runtime
+from .runtime import execute_plan
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "ref", "runtime", "execute_plan"]

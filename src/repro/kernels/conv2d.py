@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import runtime
+
 
 def conv_kernel(s_ref, f_ref, o_ref, acc_ref):
     """s_ref: (S, bh, bw) window stack block; f_ref: (S,) filter taps."""
@@ -54,7 +56,9 @@ def conv_kernel(s_ref, f_ref, o_ref, acc_ref):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bh", "bw", "bs", "interpret", "out_dtype"),
+    static_argnames=(
+        "bh", "bw", "bs", "interpret", "out_dtype", "dimension_semantics",
+    ),
 )
 def conv2d_stacked(
     stack: jax.Array,
@@ -63,8 +67,9 @@ def conv2d_stacked(
     bh: int = 128,
     bw: int = 128,
     bs: int | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
     out_dtype=None,
+    dimension_semantics: tuple[str, ...] | None = None,
 ) -> jax.Array:
     """O[h,w] = sum_s stack[s,h,w] * filt_flat[s].
 
@@ -76,14 +81,8 @@ def conv2d_stacked(
         bs = s
     assert h % bh == 0 and w % bw == 0 and s % bs == 0
     if out_dtype is None:
-        out_dtype = (
-            jnp.int32
-            if jnp.issubdtype(stack.dtype, jnp.integer)
-            else stack.dtype
-        )
-    acc_dtype = (
-        jnp.int32 if jnp.issubdtype(stack.dtype, jnp.integer) else jnp.float32
-    )
+        out_dtype = runtime.out_dtype(stack.dtype)
+    acc_dtype = runtime.acc_dtype(stack.dtype)
 
     grid = (h // bh, w // bw, s // bs)
     return pl.pallas_call(
@@ -96,8 +95,10 @@ def conv2d_stacked(
         out_specs=pl.BlockSpec((bh, bw), lambda i, j, l: (i, j)),
         out_shape=jax.ShapeDtypeStruct((h, w), out_dtype),
         scratch_shapes=[pltpu.VMEM((bh, bw), acc_dtype)],
-        interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        interpret=runtime.resolve_interpret(interpret),
+        compiler_params=runtime.compiler_params(
+            dimension_semantics=(
+                dimension_semantics or ("parallel", "parallel", "arbitrary")
+            ),
         ),
     )(stack, filt_flat)

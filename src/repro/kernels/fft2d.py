@@ -31,10 +31,12 @@ def dft_matrix(n: int, dtype=np.float32) -> tuple[np.ndarray, np.ndarray]:
     return np.cos(ang).astype(dtype), np.sin(ang).astype(dtype)
 
 
-def _cmul_mm(ar, ai, br, bi, *, three_mult: bool, bm, bn, bk, interpret):
+def _cmul_mm(ar, ai, br, bi, *, three_mult: bool, bm, bn, bk, interpret,
+             dimension_semantics=None):
     """Complex matmul (A @ B) via real MM kernel calls."""
     dot = functools.partial(
-        mm, bm=bm, bn=bn, bk=bk, interpret=interpret
+        mm, bm=bm, bn=bn, bk=bk, interpret=interpret,
+        dimension_semantics=dimension_semantics,
     )
     if three_mult:
         k1 = dot(ar + ai, br)
@@ -56,7 +58,8 @@ def fft2d(
     bn: int = 128,
     bk: int = 128,
     three_mult: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    dimension_semantics: tuple[str, ...] | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """2-D DFT of a (R, C) complex grid held as two real planes."""
     r, c = x_re.shape
@@ -69,10 +72,12 @@ def fft2d(
     y_re, y_im = _cmul_mm(
         fr_re, fr_im, x_re, x_im,
         three_mult=three_mult, bm=bm, bn=bn, bk=bk, interpret=interpret,
+        dimension_semantics=dimension_semantics,
     )
     # stage 2: cols — Z = Y @ F_C
     z_re, z_im = _cmul_mm(
         y_re, y_im, fc_re, fc_im,
         three_mult=three_mult, bm=bm, bn=bn, bk=bk, interpret=interpret,
+        dimension_semantics=dimension_semantics,
     )
     return z_re, z_im

@@ -18,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import runtime
 
 
 def fir_kernel(s_ref, h_ref, o_ref):
@@ -36,26 +37,24 @@ def fir_kernel(s_ref, h_ref, o_ref):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bn", "interpret", "out_dtype")
+    jax.jit,
+    static_argnames=("bn", "interpret", "out_dtype", "dimension_semantics"),
 )
 def fir_stacked(
     stack: jax.Array,
     taps: jax.Array,
     *,
     bn: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
     out_dtype=None,
+    dimension_semantics: tuple[str, ...] | None = None,
 ) -> jax.Array:
     """y[n] = sum_t taps[t] * stack[t, n]."""
     t, n = stack.shape
     assert taps.shape == (t,)
     assert n % bn == 0, (n, bn)
     if out_dtype is None:
-        out_dtype = (
-            jnp.int32
-            if jnp.issubdtype(stack.dtype, jnp.integer)
-            else stack.dtype
-        )
+        out_dtype = runtime.out_dtype(stack.dtype)
     grid = (n // bn,)
     return pl.pallas_call(
         fir_kernel,
@@ -66,8 +65,8 @@ def fir_stacked(
         ],
         out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), out_dtype),
-        interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel",),
+        interpret=runtime.resolve_interpret(interpret),
+        compiler_params=runtime.compiler_params(
+            dimension_semantics=dimension_semantics or ("parallel",),
         ),
     )(stack, taps.reshape(t, 1))

@@ -4,12 +4,17 @@ Each wrapper owns the staging-layer data movement (the paper's PL DMA
 module, §IV): padding to tile multiples, shifted-window stacking for
 conv/fir, and complex lowering for FFT/complex FIR.  Model code calls these
 (`use_pallas=True` paths); the dry-run uses the XLA path since Mosaic only
-lowers on TPU targets — on CPU, kernels run under interpret=True.
+lowers on TPU targets — ``interpret=None`` resolves through
+``runtime.resolve_interpret`` (interpret mode everywhere but real TPU).
+
+Plan-driven callers should go through ``runtime.execute_plan`` instead,
+which derives the tile/semantics kwargs below from a mapper ExecutionPlan.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +23,14 @@ from . import conv2d as _conv
 from . import fir as _fir
 from . import fft2d as _fft
 from . import widesa_mm as _mm
+
+
+def _div_tile(n: int, tile: int) -> int:
+    """Largest divisor of ``n`` that is <= ``tile`` (exact-grid tiles)."""
+    tile = max(1, min(tile, n))
+    while n % tile:
+        tile -= 1
+    return tile
 
 
 def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
@@ -36,7 +49,8 @@ def matmul(
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    dimension_semantics: tuple[str, ...] | None = None,
 ) -> jax.Array:
     """C = A @ B with automatic padding to the plan tiles."""
     m, k = a.shape
@@ -44,7 +58,8 @@ def matmul(
     bm_, bn_, bk_ = min(bm, m) or 1, min(bn, n) or 1, min(bk, k) or 1
     ap = _pad_to(a, (bm_, bk_))
     bp = _pad_to(b, (bk_, bn_))
-    out = _mm.matmul(ap, bp, bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
+    out = _mm.matmul(ap, bp, bm=bm_, bn=bn_, bk=bk_, interpret=interpret,
+                     dimension_semantics=dimension_semantics)
     return out[:m, :n]
 
 
@@ -54,7 +69,8 @@ def conv2d(
     *,
     bh: int = 128,
     bw: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    dimension_semantics: tuple[str, ...] | None = None,
 ) -> jax.Array:
     """VALID 2-D correlation via the shifted-window stack (DMA staging)."""
     p, q = filt.shape
@@ -66,7 +82,8 @@ def conv2d(
     bh_, bw_ = min(bh, oh), min(bw, ow)
     stack = _pad_to(stack, (1, bh_, bw_))
     out = _conv.conv2d_stacked(
-        stack, filt.reshape(-1), bh=bh_, bw=bw_, interpret=interpret
+        stack, filt.reshape(-1), bh=bh_, bw=bw_, interpret=interpret,
+        dimension_semantics=dimension_semantics,
     )
     return out[:oh, :ow]
 
@@ -76,7 +93,8 @@ def fir(
     taps: jax.Array,
     *,
     bn: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    dimension_semantics: tuple[str, ...] | None = None,
 ) -> jax.Array:
     """VALID FIR via the shifted stack."""
     t = taps.shape[0]
@@ -84,12 +102,13 @@ def fir(
     stack = jnp.stack([x[i : i + n_out] for i in range(t)])  # (t, n_out)
     bn_ = min(bn, n_out)
     stack = _pad_to(stack, (1, bn_))
-    out = _fir.fir_stacked(stack, taps, bn=bn_, interpret=interpret)
+    out = _fir.fir_stacked(stack, taps, bn=bn_, interpret=interpret,
+                           dimension_semantics=dimension_semantics)
     return out[:n_out]
 
 
 def fir_complex(
-    x_re, x_im, h_re, h_im, *, bn: int = 1024, interpret: bool = True
+    x_re, x_im, h_re, h_im, *, bn: int = 1024, interpret: bool | None = None
 ):
     """cfloat FIR as four real passes (MXU-native complex lowering)."""
     f = functools.partial(fir, bn=bn, interpret=interpret)
@@ -108,12 +127,19 @@ def fft2d(
     bn: int = 128,
     bk: int = 128,
     three_mult: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    dimension_semantics: tuple[str, ...] | None = None,
 ):
     r, c = x_re.shape
-    bm_, bn_, bk_ = min(bm, r), min(bn, c), min(bk, r)
+    # Both DFT stages run with the same tiles: stage 1 is (r,r)@(r,c) and
+    # stage 2 is (r,c)@(c,c), so bm must divide r, bn must divide c, and
+    # bk must divide BOTH contraction extents (r and c) — hence gcd.
+    bm_ = _div_tile(r, bm)
+    bn_ = _div_tile(c, bn)
+    bk_ = _div_tile(math.gcd(r, c), bk)
     return _fft.fft2d(
         x_re, x_im,
         bm=bm_, bn=bn_, bk=bk_,
         three_mult=three_mult, interpret=interpret,
+        dimension_semantics=dimension_semantics,
     )

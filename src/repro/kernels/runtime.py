@@ -1,0 +1,216 @@
+"""Plan-driven Pallas kernel runtime (the ExecutionPlan -> kernel contract).
+
+Two jobs:
+
+1. **Version-portable Pallas compat shim.**  ``compiler_params(...)``
+   resolves the moving ``pltpu.CompilerParams`` / ``pltpu.TPUCompilerParams``
+   name (renamed across jax releases) and filters kwargs the installed
+   class does not know, so kernels never touch ``pltpu`` spelling directly.
+   ``resolve_interpret`` centralizes the interpret-mode fallback: Mosaic
+   only lowers on real TPU backends, so on CPU/GPU every kernel runs under
+   ``interpret=True`` unless the caller forces otherwise.  The dtype
+   packing ladder is shared with ``core/partition`` (one source of truth
+   for DTYPE_BYTES/PACKING between the cost model and the runtime).
+
+2. **``execute_plan(plan, *operands)``.**  A single entry point that takes
+   a ``mapper.ExecutionPlan`` and dispatches to the right kernel
+   (widesa_mm / fir / conv2d / fft2d) with block shapes, grid and
+   dimension semantics derived *from the plan* — the per-kernel tile
+   heuristics live in the mapper's partition search, not in call sites.
+
+Codegen's pallas backend, ops-level callers and the benchmarks all route
+through this module, which makes the mapper's ExecutionPlan the executable
+contract rather than a planning artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import TYPE_CHECKING
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.partition import (  # noqa: F401  (re-exported ladder)
+    DTYPE_BYTES,
+    MXU_LANES,
+    PACKING,
+    PACKING_TPU,
+)
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids import cycles
+    from repro.core.mapper import ExecutionPlan
+    from repro.core.recurrence import UniformRecurrence
+
+
+# ---------------------------------------------------------------------------
+# compat shim: compiler params + interpret fallback
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def _compiler_params_cls():
+    """The installed Pallas TPU compiler-params class, newest name first."""
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            return cls
+    return None
+
+
+def compiler_params(*, dimension_semantics=None, **kwargs):
+    """Build Pallas TPU compiler params portably.
+
+    Unknown kwargs (perf hints a given jax release lacks) are dropped
+    rather than erroring, so kernels can request e.g. vmem limits without
+    pinning a jax version.  ``dimension_semantics`` is the exception: it
+    changes kernel *correctness* (reduction grid dims must stay
+    "arbitrary"), so a params class that cannot carry it is an error, not
+    a silent drop.  Returns None when no params class exists —
+    ``pl.pallas_call`` accepts ``compiler_params=None``.
+    """
+    cls = _compiler_params_cls()
+    if cls is None:  # pragma: no cover - jax too old/new to have either name
+        return None
+    known = {f.name for f in dataclasses.fields(cls)}
+    if dimension_semantics is not None:
+        if "dimension_semantics" not in known:  # pragma: no cover
+            raise RuntimeError(
+                f"{cls.__name__} does not accept dimension_semantics; "
+                "refusing to drop a correctness-critical parameter — "
+                "update kernels/runtime.py for this jax version")
+        kwargs["dimension_semantics"] = tuple(dimension_semantics)
+    return cls(**{k: v for k, v in kwargs.items() if k in known})
+
+
+@functools.lru_cache(maxsize=1)
+def default_interpret() -> bool:
+    """True unless a real TPU backend is attached (Mosaic lowers TPU-only)."""
+    try:
+        return jax.default_backend() != "tpu"
+    except RuntimeError:  # pragma: no cover - no backend at all
+        return True
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """None -> backend-appropriate default; explicit bool wins."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def acc_dtype(dtype):
+    """Accumulator dtype ladder: integer inputs -> int32, else float32."""
+    import jax.numpy as jnp
+
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        return jnp.int32
+    return jnp.float32
+
+
+def out_dtype(dtype):
+    """Default output dtype: int accumulations widen to int32."""
+    import jax.numpy as jnp
+
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        return jnp.int32
+    return jnp.dtype(dtype)
+
+
+def packing_factor(dtype_name: str, packing: str = "tpu") -> float:
+    """MACs/cycle multiplier of ``dtype_name`` on the chosen packing ladder
+    (shared with the mapper's cost model — see core/partition.py)."""
+    ladder = PACKING_TPU if packing == "tpu" else PACKING
+    return ladder.get(dtype_name, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# plan-derived kernel parameters
+# ---------------------------------------------------------------------------
+
+def grid_semantics(rec: "UniformRecurrence", grid_loops) -> tuple[str, ...]:
+    """Pallas dimension semantics for a kernel grid derived from the IR.
+
+    ``grid_loops``: one entry per grid dimension — a loop name, or a tuple
+    of fused loop names (e.g. conv2d's flattened (p, q) reduction).  A grid
+    dimension revisits its output block iff it carries a reduction loop,
+    which is exactly Mosaic's "arbitrary"; everything else is "parallel".
+    """
+    sems = []
+    for entry in grid_loops:
+        loops = entry if isinstance(entry, tuple) else (entry,)
+        red = any(l in rec.reduction_loops for l in loops)
+        sems.append("arbitrary" if red else "parallel")
+    return tuple(sems)
+
+
+def plan_kernel_kwargs(plan: "ExecutionPlan") -> dict:
+    """Kernel-call kwargs (block shapes + dimension semantics) from a plan.
+
+    The partition's per-loop block extents become the Pallas BlockSpec
+    tiles; the schedule's space/time split plus the recurrence's reduction
+    loops become the grid's dimension semantics.
+    """
+    rec = plan.recurrence
+    blk = plan.partition.block
+    name = rec.name
+    if name in ("mm", "fft2d_stage"):
+        return {
+            "bm": blk.get("i", MXU_LANES),
+            "bn": blk.get("j", MXU_LANES),
+            "bk": blk.get("k", MXU_LANES),
+            "dimension_semantics": grid_semantics(rec, ("i", "j", "k")),
+        }
+    if name == "conv2d":
+        return {
+            "bh": blk.get("h", MXU_LANES),
+            "bw": blk.get("w", MXU_LANES),
+            "dimension_semantics": grid_semantics(rec, ("h", "w", ("p", "q"))),
+        }
+    if name == "fir":
+        return {
+            "bn": blk.get("n", 1024),
+            "dimension_semantics": grid_semantics(rec, ("n",)),
+        }
+    raise NotImplementedError(f"no kernel for recurrence {name!r}")
+
+
+_OPERAND_ARITY = {"mm": 2, "fft2d_stage": 2, "conv2d": 2, "fir": 2}
+
+
+def execute_plan(plan: "ExecutionPlan", *operands, interpret: bool | None = None):
+    """Execute an ExecutionPlan on concrete operands via its Pallas kernel.
+
+    Dispatch (operands follow the recurrence builders in core/recurrence):
+
+        mm           (a[m,k], b[k,n])        -> C = A @ B
+        conv2d       (img[h,w], filt[p,q])   -> VALID 2-D correlation
+        fir          (x[n], taps[t])         -> VALID FIR
+        fft2d_stage  (x_re[r,c], x_im[r,c])  -> 2-D DFT (both MM stages run
+                                                with this stage's tiles)
+
+    Block shapes, grid and dimension semantics come from the plan; the
+    staging-layer data movement (padding, window stacking, complex
+    lowering) is ops.py's, unchanged.  ``interpret=None`` resolves to the
+    backend default (interpret off TPU).
+    """
+    from . import ops  # local import: ops imports the kernels importing us
+
+    rec = plan.recurrence
+    arity = _OPERAND_ARITY.get(rec.name)
+    if arity is None:
+        raise NotImplementedError(f"no kernel for recurrence {rec.name!r}")
+    if len(operands) != arity:
+        raise ValueError(
+            f"{rec.name} expects {arity} operands, got {len(operands)}")
+    kw = plan_kernel_kwargs(plan)
+    sem = kw.pop("dimension_semantics")
+    interp = resolve_interpret(interpret)
+    if rec.name == "mm":
+        return ops.matmul(*operands, **kw, dimension_semantics=sem,
+                          interpret=interp)
+    if rec.name == "fft2d_stage":
+        return ops.fft2d(*operands, **kw, dimension_semantics=sem,
+                         interpret=interp)
+    if rec.name == "conv2d":
+        return ops.conv2d(*operands, **kw, dimension_semantics=sem,
+                          interpret=interp)
+    return ops.fir(*operands, **kw, dimension_semantics=sem, interpret=interp)

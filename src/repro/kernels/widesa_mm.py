@@ -23,11 +23,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import runtime
 
-def _acc_dtype(dtype) -> jnp.dtype:
-    if jnp.issubdtype(dtype, jnp.integer):
-        return jnp.int32
-    return jnp.float32
+_acc_dtype = runtime.acc_dtype
 
 
 def mm_kernel(a_ref, b_ref, o_ref, acc_ref):
@@ -56,7 +54,10 @@ def mm_kernel(a_ref, b_ref, o_ref, acc_ref):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+    jax.jit,
+    static_argnames=(
+        "bm", "bn", "bk", "interpret", "out_dtype", "dimension_semantics",
+    ),
 )
 def matmul(
     a: jax.Array,
@@ -65,13 +66,17 @@ def matmul(
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
     out_dtype=None,
+    dimension_semantics: tuple[str, ...] | None = None,
 ) -> jax.Array:
     """C[m,n] = A[m,k] @ B[k,n] with WideSA plan tiles.
 
     Shapes must be divisible by the tiles (the mapper guarantees this via
-    divisor-exact block selection; ops.matmul pads otherwise).
+    divisor-exact block selection; ops.matmul pads otherwise).  Tile sizes
+    and ``dimension_semantics`` normally come from an ExecutionPlan via
+    ``runtime.execute_plan``; the defaults reproduce the plan the mapper
+    picks for MXU-aligned MM.
     """
     m, k = a.shape
     k2, n = b.shape
@@ -94,8 +99,10 @@ def matmul(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
-        interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        interpret=runtime.resolve_interpret(interpret),
+        compiler_params=runtime.compiler_params(
+            dimension_semantics=(
+                dimension_semantics or ("parallel", "parallel", "arbitrary")
+            ),
         ),
     )(a, b)

@@ -170,7 +170,8 @@ def _lower_one(cfg, shape, mesh, ctx, api):
 
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    from repro.compat import cost_analysis
+    cost = cost_analysis(compiled)
     hlo = compiled.as_text()
     coll = RL.collective_bytes(hlo)
     mem_d = {

@@ -193,7 +193,9 @@ def _moe_shard_map(p, cfg, x, ctx):
         aux = jax.lax.pmean(aux, exp_axis)
         return y.reshape(b_loc, s, d), aux
 
-    fn = jax.shard_map(
+    from repro.compat import shard_map as _shard_map
+
+    fn = _shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(
@@ -204,7 +206,7 @@ def _moe_shard_map(p, cfg, x, ctx):
             P(exp_axis, None, None),
         ),
         out_specs=(P(batch_axis, None, None), P()),
-        check_vma=False,
+        check=False,
     )
     return fn(x, p["router"], p["wg"], p["wu"], p["wd"])
 

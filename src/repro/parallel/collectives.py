@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
+
 
 # ---------------------------------------------------------------------------
 # int8 quantized all-reduce (stochastic rounding)
@@ -139,7 +141,7 @@ def moe_ep_alltoall(cfg, p, x, ctx):
         aux = jax.lax.pmean(aux, exp_axis)
         return y.reshape(b_loc, s_loc, d), aux
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(
@@ -150,6 +152,6 @@ def moe_ep_alltoall(cfg, p, x, ctx):
             P(exp_axis, None, None),
         ),
         out_specs=(P(batch_axis, exp_axis, None), P()),
-        check_vma=False,
+        check=False,
     )
     return fn(x, p["router"], p["wg"], p["wu"], p["wd"])

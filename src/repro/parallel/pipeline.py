@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
+
 
 def pipeline_apply(
     block_fn: Callable,
@@ -97,11 +99,11 @@ def pipeline_apply(
         out = jax.lax.psum(out * owner, axis)
         return out.reshape(x_all.shape)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         stage_fn,
         mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_vma=False,
+        check=False,
     )
     return fn(stacked_params, x)

@@ -104,10 +104,16 @@ class Trainer:
                     self.mesh, p_spec)
                 opt_shardings = spec_tree_to_shardings(self.mesh, o_spec)
                 batch_shardings = spec_tree_to_shardings(self.mesh, b_spec)
+                # Pin out_shardings to the same trees as in_shardings: with
+                # them unspecified, GSPMD may commit the updated params to a
+                # different (propagated) sharding than the declared inputs,
+                # and the *next* step call rejects its own previous output.
                 self._step_fn = jax.jit(
                     train_step,
                     in_shardings=(self.param_shardings, opt_shardings,
                                   batch_shardings, None),
+                    out_shardings=(self.param_shardings, opt_shardings,
+                                   None),
                     donate_argnums=(0, 1),
                 )
             else:
@@ -144,8 +150,13 @@ class Trainer:
         start = 0
         last = latest_step(self.ckpt_dir)
         if resume and last is not None:
+            shardings = (
+                {"p": self.param_shardings}
+                if self.param_shardings is not None else None
+            )
             params = restore_checkpoint(
-                self.ckpt_dir, last, {"p": params})["p"]
+                self.ckpt_dir, last, {"p": params},
+                shardings=shardings)["p"]
             start = last
             print(f"[trainer] resumed from step {last}")
         history = []

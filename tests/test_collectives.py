@@ -10,28 +10,28 @@ import sys
 sys.path.insert(0, "src")
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, shard_map
 from repro.parallel.collectives import quantized_psum, ring_reduce_scatter_matmul
 
 rng = np.random.default_rng(0)
 
 # --- ring reduce-scatter matmul == plain matmul ---
-mesh = jax.make_mesh((8,), ("tp",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("tp",))
 m, k, n = 64, 128, 32
 x = rng.standard_normal((m, k)).astype(np.float32)
 w = rng.standard_normal((k, n)).astype(np.float32)
-fn = jax.shard_map(lambda xl, wl: ring_reduce_scatter_matmul(xl, wl, "tp", 8),
-                   mesh=mesh, in_specs=(P(None, "tp"), P("tp", None)),
-                   out_specs=P("tp", None), check_vma=False)
+fn = shard_map(lambda xl, wl: ring_reduce_scatter_matmul(xl, wl, "tp", 8),
+               mesh=mesh, in_specs=(P(None, "tp"), P("tp", None)),
+               out_specs=P("tp", None), check=False)
 y = np.asarray(jax.jit(fn)(jnp.asarray(x), jnp.asarray(w)))
 print("RING_OK" if np.allclose(y, x @ w, atol=1e-3) else "RING_FAIL")
 
 # --- quantized psum: unbiased within quantization noise ---
 g = rng.standard_normal((8, 256)).astype(np.float32) * 3
-fn2 = jax.shard_map(lambda gl: quantized_psum(gl, "dp", jax.random.PRNGKey(1)),
-                    mesh=jax.make_mesh((8,), ("dp",),
-                                       axis_types=(jax.sharding.AxisType.Auto,)),
-                    in_specs=P("dp", None), out_specs=P("dp", None),
-                    check_vma=False)
+fn2 = shard_map(lambda gl: quantized_psum(gl, "dp", jax.random.PRNGKey(1)),
+                mesh=make_mesh((8,), ("dp",)),
+                in_specs=P("dp", None), out_specs=P("dp", None),
+                check=False)
 out = np.asarray(jax.jit(fn2)(jnp.asarray(g)))[0]
 true = g.sum(0)
 scale = np.abs(g).max() / 127.0
@@ -52,8 +52,7 @@ x = jnp.asarray(rng.standard_normal((8, 4, cfg.d_model)), jnp.float32)
 
 y_ref, aux_ref = MOE.apply_moe(p, cfg, x)  # no mesh: dense path
 
-mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = make_mesh((2, 4), ("data", "model"))
 with mesh_context(mesh2):
     y_tp, aux_tp = jax.jit(lambda p, x: MOE.apply_moe(p, cfg, x))(p, x)
 cfg_ep = dataclasses.replace(cfg, moe_ep=True)

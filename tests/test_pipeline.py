@@ -13,10 +13,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 sys.path.insert(0, "src")
 import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
 from repro.parallel.pipeline import pipeline_apply
 
-mesh = jax.make_mesh((4,), ("pipe",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("pipe",))
 rng = np.random.default_rng(0)
 L, B, D = 8, 16, 32
 w = jnp.asarray(rng.standard_normal((L, D, D)) * 0.1, jnp.float32)

@@ -1,8 +1,15 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+Skips cleanly when hypothesis is not installed locally; CI installs it via
+the ``test`` extra (see pyproject.toml / .github/workflows/ci.yml).
+"""
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     Target,

@@ -40,8 +40,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys; sys.path.insert(0, "src")
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh
 from repro.core.roofline import collective_bytes
-mesh = jax.make_mesh((8,), ("tp",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("tp",))
 x = jax.ShapeDtypeStruct((64, 512), jnp.float32,
                          sharding=NamedSharding(mesh, P(None, "tp")))
 w = jax.ShapeDtypeStruct((512, 32), jnp.float32,
