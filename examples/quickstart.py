@@ -19,6 +19,7 @@ from repro.core import (
     map_recurrence,
     matmul,
 )
+from repro.kernels import execute_plan, registry
 
 
 def main():
@@ -52,6 +53,23 @@ def main():
     out = fn(a, b)
     err = float(jnp.max(jnp.abs(out - a @ b)))
     print(f"  max |pallas - jnp| = {err:.2e}")
+    assert err < 1e-2
+
+    print("\nregistered recurrences (kernels/registry.py):")
+    for name in registry.registered_names():
+        spec = registry.get(name)
+        print(f"  {name:12s} arity={spec.arity} grid={spec.grid_loops} "
+              f"systolic={spec.supports_systolic}")
+
+    print("\nany registered recurrence runs the same way — MTTKRP:")
+    spec = registry.get("mttkrp")
+    rec = spec.builder(64, 48, 16, 8, "float32")
+    plan = best_plan(rec, Target(name="single_chip", mesh_shape=(1, 1)))
+    operands = spec.operands(rec, rng)
+    out = execute_plan(plan, *operands)
+    err = float(jnp.max(jnp.abs(out - spec.xla(*operands))))
+    print(f"  {plan.describe()}")
+    print(f"  max |pallas - xla| = {err:.2e}")
     assert err < 1e-2
     print("OK")
 

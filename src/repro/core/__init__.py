@@ -14,10 +14,13 @@ from .recurrence import (
     Access,
     Dependence,
     UniformRecurrence,
+    batched_matmul,
     conv2d,
     fft2d_stage,
     fir,
+    jacobi2d,
     matmul,
+    mttkrp,
 )
 from .spacetime import SystolicSchedule, enumerate_schedules
 from .partition import Partition, partition_schedule
@@ -34,6 +37,7 @@ from .codegen import lower_plan
 __all__ = [
     "Access", "Dependence", "UniformRecurrence",
     "matmul", "conv2d", "fir", "fft2d_stage",
+    "batched_matmul", "jacobi2d", "mttkrp",
     "SystolicSchedule", "enumerate_schedules",
     "Partition", "partition_schedule",
     "MappedGraph", "build_mapped_graph", "assign_plios", "congestion",

@@ -12,8 +12,12 @@ Three backends:
               psum_scatter.  This is the paper's systolic design at pod
               scale and the baseline for the §Perf collective hillclimb.
 
-Only recurrences from core.recurrence's builders are supported — which is
-exactly the paper's benchmark set plus the model matmuls.
+Every backend resolves the recurrence through the KernelSpec registry
+(``repro/kernels/registry.py``): 'xla' uses the spec's reference lowering,
+'pallas' goes through ``runtime.execute_plan``, and the chip-level
+schedules check the spec's ``supports_systolic`` capability flag instead
+of hardcoding recurrence names.  An unregistered recurrence raises
+``registry.UnregisteredRecurrenceError`` from any backend.
 """
 
 from __future__ import annotations
@@ -35,46 +39,16 @@ from .mapper import ExecutionPlan
 # ---------------------------------------------------------------------------
 
 def _xla_fn(plan: ExecutionPlan) -> Callable:
-    name = plan.recurrence.name
-    if name == "mm":
-        def mm(a, b):
-            acc = jnp.promote_types(a.dtype, jnp.int32) if (
-                jnp.issubdtype(a.dtype, jnp.integer)) else jnp.float32
-            return jax.lax.dot(a, b, preferred_element_type=acc).astype(
-                _out_dtype(a.dtype))
-        return mm
-    if name == "fft2d_stage":
-        # operand convention matches the kernel runtime: (x_re, x_im) ->
-        # full 2-D DFT as two real planes (both MM stages of the plan)
-        def fft(x_re, x_im):
-            z = jnp.fft.fft2(
-                x_re.astype(jnp.complex64) + 1j * x_im.astype(jnp.complex64))
-            return jnp.real(z), jnp.imag(z)
-        return fft
-    if name == "conv2d":
-        def conv(img, filt):
-            acc = jnp.float32 if not jnp.issubdtype(
-                img.dtype, jnp.integer) else jnp.int32
-            out = jax.lax.conv_general_dilated(
-                img[None, None].astype(acc),
-                filt[None, None].astype(acc),
-                window_strides=(1, 1),
-                padding="VALID",
-                dimension_numbers=("NCHW", "OIHW", "NCHW"),
-            )[0, 0]
-            return out.astype(_out_dtype(img.dtype))
-        return conv
-    if name == "fir":
-        def fir(x, h):
-            acc = jnp.float32 if not jnp.issubdtype(
-                x.dtype, jnp.integer) else jnp.int32
-            taps = h.shape[0]
-            out = jnp.zeros(x.shape[0] - taps + 1, dtype=acc)
-            for t in range(taps):
-                out = out + x[t : t + out.shape[0]].astype(acc) * h[t].astype(acc)
-            return out.astype(_out_dtype(x.dtype))
-        return fir
-    raise NotImplementedError(name)
+    """The registered reference lowering — one oracle per recurrence,
+    shared with the test suite (kernels/ref.py by way of the registry)."""
+    return _spec(plan).xla
+
+
+def _spec(plan: ExecutionPlan):
+    # lazy: kernels imports core.partition; codegen must not close the cycle
+    from repro.kernels import registry
+
+    return registry.get(plan.recurrence.name)
 
 
 def _out_dtype(in_dtype):
@@ -82,6 +56,13 @@ def _out_dtype(in_dtype):
     from repro.kernels import runtime
 
     return runtime.out_dtype(in_dtype)
+
+
+def _acc_dtype(in_dtype):
+    # accumulator ladder: int operands widen to int32, floats to float32
+    from repro.kernels import runtime
+
+    return runtime.acc_dtype(in_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -110,7 +91,6 @@ def _systolic_mm(plan: ExecutionPlan, mesh) -> Callable:
     chip-level analogue of the paper's neighbour DMA streams, and it never
     materializes a gathered operand (edge-bandwidth optimal).
     """
-    ax0, ax1 = plan.axis_assignment.stream_axis.get("A"), None
     axes = plan.target.mesh_axes
     ax0, ax1 = axes[0], axes[1] if len(axes) > 1 else axes[0]
     n0 = mesh.shape[ax0]
@@ -130,11 +110,11 @@ def _systolic_mm(plan: ExecutionPlan, mesh) -> Callable:
         a_blk = jax.lax.ppermute(a_blk, (ax0, ax1), skew_a)
         b_blk = jax.lax.ppermute(b_blk, (ax0, ax1), skew_b)
 
+        acc_t = _acc_dtype(a_blk.dtype)
+
         def body(step, carry):
             a, b, acc = carry
-            acc = acc + jnp.dot(
-                a, b, preferred_element_type=jnp.float32
-            )
+            acc = acc + jnp.dot(a, b, preferred_element_type=acc_t)
             a = jax.lax.ppermute(
                 a, ax1, [((c + 1) % steps, c) for c in range(steps)]
             )
@@ -145,7 +125,7 @@ def _systolic_mm(plan: ExecutionPlan, mesh) -> Callable:
 
         m, k = a_blk.shape
         n = b_blk.shape[1]
-        acc = jnp.zeros((m, n), jnp.float32)
+        acc = jnp.zeros((m, n), acc_t)
         a_blk, b_blk, acc = jax.lax.fori_loop(
             0, steps, body, (a_blk, b_blk, acc)
         )
@@ -170,7 +150,8 @@ def _allgather_mm(plan: ExecutionPlan, mesh) -> Callable:
     def local(a_blk, b_blk):
         b_full = jax.lax.all_gather(b_blk, ax0, axis=0, tiled=True)
         a_full = jax.lax.all_gather(a_blk, ax1, axis=1, tiled=True)
-        return jnp.dot(a_full, b_full, preferred_element_type=jnp.float32
+        return jnp.dot(a_full, b_full,
+                       preferred_element_type=_acc_dtype(a_blk.dtype)
                        ).astype(_out_dtype(a_blk.dtype))
 
     return _shard_map(
@@ -192,16 +173,17 @@ def lower_plan(
         return _xla_fn(plan)
     if backend == "pallas":
         return _pallas_fn(plan, interpret=interpret)
-    if backend == "systolic":
+    if backend in ("systolic", "allgather"):
         assert mesh is not None
-        # fft2d_stage takes (x_re, x_im) operands everywhere else now; the
-        # cannon schedule is written for the plain (a, b) matmul contract.
-        if plan.recurrence.name != "mm":
-            raise NotImplementedError("systolic backend: mm only")
-        return _systolic_mm(plan, mesh)
-    if backend == "allgather":
-        assert mesh is not None
-        if plan.recurrence.name != "mm":  # same (a, b) contract as systolic
-            raise NotImplementedError("allgather backend: mm only")
+        # the chip-level schedules are written for the plain (a, b) matmul
+        # operand contract; each KernelSpec declares whether it satisfies
+        # it (e.g. fft2d_stage is mm-shaped but streams (x_re, x_im)).
+        spec = _spec(plan)
+        if not spec.supports_systolic:
+            raise NotImplementedError(
+                f"{backend} backend: recurrence {spec.name!r} declares "
+                "supports_systolic=False")
+        if backend == "systolic":
+            return _systolic_mm(plan, mesh)
         return _allgather_mm(plan, mesh)
     raise ValueError(f"unknown backend {backend}")

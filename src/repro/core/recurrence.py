@@ -11,8 +11,17 @@ plus builders for the paper's four benchmark recurrences:
     FIR      y[n]     += x[n+t] * h[t]
     2D-FFT   four-step decomposition: each DFT stage is an MM recurrence
 
+and three beyond-paper workloads from the domains the paper names
+("deep learning, high-performance computation, and signal processing"):
+
+    BMM      C[b,i,j] += A[b,i,k] * B[b,k,j]     (the model-stack shape)
+    Jacobi2D O[i,j]   += G[i+di_s, j+dj_s] * w[s] (5-point stencil sweep)
+    MTTKRP   M[i,j]   += X[i,k,l] * B[k,j] * C[l,j] (tensor decomposition)
+
 Accesses are affine with unit coefficients (array index = subset of loop
 indices + constant offsets), which is exactly the class the paper handles.
+The execution stack (kernels/registry.py) declares one KernelSpec per
+builder here; adding a recurrence = one builder + one registration.
 """
 
 from __future__ import annotations
@@ -233,6 +242,87 @@ def fft2d_stage(rows: int, cols: int, dtype: str = "cfloat") -> UniformRecurrenc
         ),
         reduction_loops=frozenset({"k"}),
         ops_per_point=8,
+        dtype=dtype,
+    )
+    r.validate()
+    return r
+
+
+def batched_matmul(
+    b: int, n: int, m: int, k: int, dtype: str = "float32"
+) -> UniformRecurrence:
+    """C[bb,i,j] += A[bb,i,k] * B[bb,k,j] — the model-stack matmul shape
+    (attention heads, expert stacks, microbatched layers)."""
+    r = UniformRecurrence(
+        name="bmm",
+        loops=("b", "i", "j", "k"),
+        extents=(b, n, m, k),
+        accesses=(
+            Access("A", (("b", 0), ("i", 0), ("k", 0)), "read"),
+            Access("B", (("b", 0), ("k", 0), ("j", 0)), "read"),
+            Access("C", (("b", 0), ("i", 0), ("j", 0)), "accum"),
+        ),
+        reduction_loops=frozenset({"k"}),
+        ops_per_point=2,
+        dtype=dtype,
+    )
+    r.validate()
+    return r
+
+
+#: 5-point star offsets of the Jacobi2D stencil, indexed by the reduction
+#: loop s; (di, dj) into the padded input grid (centre at (1, 1)).
+JACOBI2D_OFFSETS = ((1, 1), (0, 1), (2, 1), (1, 0), (1, 2))
+
+
+def jacobi2d(h: int, w: int, dtype: str = "float32") -> UniformRecurrence:
+    """O[i,j] += G[i+di_s, j+dj_s] * w[s] — one weighted 5-point Jacobi
+    sweep over the interior of an (h+2, w+2) grid.
+
+    Same structural class as the Versal stencil-advection work: the star
+    is flattened into the reduction loop s (like conv2d's (p, q) window),
+    and the staging layer builds the shifted-point stack.  ``h``/``w`` are
+    the *output* (interior) extents.
+    """
+    r = UniformRecurrence(
+        name="jacobi2d",
+        loops=("i", "j", "s"),
+        extents=(h, w, len(JACOBI2D_OFFSETS)),
+        accesses=(
+            Access("G", (("i", 0), ("j", 0)), "read"),  # base point; star
+            Access("W", (("s", 0),), "read"),           # offsets live in the
+            Access("O", (("i", 0), ("j", 0)), "accum"),  # staged stack
+        ),
+        reduction_loops=frozenset({"s"}),
+        ops_per_point=2,
+        dtype=dtype,
+    )
+    r.validate()
+    return r
+
+
+def mttkrp(
+    i: int, j: int, k: int, l: int, dtype: str = "float32"  # noqa: E741
+) -> UniformRecurrence:
+    """M[i,j] += X[i,k,l] * B[k,j] * C[l,j] — matricized tensor times
+    Khatri-Rao product (mode-1), the HPC tensor-decomposition hot loop.
+
+    3 ops per point (two multiplies + one accumulate); two reduction
+    loops (k, l) contract the order-3 tensor against both factor
+    matrices.
+    """
+    r = UniformRecurrence(
+        name="mttkrp",
+        loops=("i", "j", "k", "l"),
+        extents=(i, j, k, l),
+        accesses=(
+            Access("X", (("i", 0), ("k", 0), ("l", 0)), "read"),
+            Access("B", (("k", 0), ("j", 0)), "read"),
+            Access("C", (("l", 0), ("j", 0)), "read"),
+            Access("M", (("i", 0), ("j", 0)), "accum"),
+        ),
+        reduction_loops=frozenset({"k", "l"}),
+        ops_per_point=3,
         dtype=dtype,
     )
     r.validate()

@@ -1,19 +1,30 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
+    registry.py   — KernelSpec registry: the per-recurrence execution
+                    contract (arity, grid loops, tile kwargs, Pallas +
+                    XLA lowerings, capabilities) in one place
     runtime.py    — plan-driven runtime: version-portable Pallas compat
-                    shim + execute_plan(plan, *operands) dispatch
+                    shim + execute_plan(plan, *operands) registry dispatch
     widesa_mm.py  — systolic MM (the paper's flagship benchmark)
+    bmm.py        — batched MM (the model-stack shape)
     conv2d.py     — 2-D conv as stacked-window MM recurrence
     fir.py        — FIR as stacked-window MM recurrence
     fft2d.py      — 2-D FFT as four-step matmul stages (MXU-native)
+    mttkrp.py     — MTTKRP (tensor-decomposition hot loop)
     ops.py        — jit'd public wrappers (staging layer / DMA analogue)
-    ref.py        — pure-jnp oracles
+    ref.py        — pure-jnp oracles (= the registry's XLA lowerings)
 
 All kernels validate in interpret=True mode on CPU; BlockSpecs are written
-for TPU VMEM/MXU geometry (see core/partition.py constants).
+for TPU VMEM/MXU geometry (see core/partition.py constants).  Adding a
+kernel = an IR builder in core/recurrence.py + one registry entry (README:
+'Adding a new recurrence').
 """
 
-from . import ops, ref, runtime
+from . import ops, ref, registry, runtime
+from .registry import KernelSpec, UnregisteredRecurrenceError
 from .runtime import execute_plan
 
-__all__ = ["ops", "ref", "runtime", "execute_plan"]
+__all__ = [
+    "ops", "ref", "registry", "runtime",
+    "KernelSpec", "UnregisteredRecurrenceError", "execute_plan",
+]

@@ -1,0 +1,112 @@
+"""MTTKRP kernel (HPC tensor-decomposition hot loop, beyond-paper).
+
+M[i,j] += X[i,k,l] * B[k,j] * C[l,j] — the matricized-tensor times
+Khatri-Rao product that dominates CP tensor decomposition.  Two reduction
+loops (k, l) stream through two "arbitrary" grid dimensions while the
+(i, j) output tile stays resident in the VMEM accumulator — the same
+latency-hiding structure as the WideSA MM, with a rank-3 operand.
+
+Per (k, l) grid step the block contraction is
+
+    acc[i,j] += sum_{k0,l0} X[i,k0,l0] * B[k0,j] * C[l0,j]
+
+evaluated as one einsum so the MXU sees a fused (i, kl) x (kl, j)
+contraction after the compiler folds the Khatri-Rao factor product.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import runtime
+
+
+def mttkrp_kernel(x_ref, b_ref, c_ref, o_ref, acc_ref):
+    """x: (bi, bk, bl); b: (bk, bj); c: (bl, bj) -> o: (bi, bj)."""
+    first = jnp.logical_and(pl.program_id(2) == 0, pl.program_id(3) == 0)
+
+    @pl.when(first)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    b = b_ref[...]
+    c = c_ref[...]
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        acc_ref[...] += jnp.einsum(
+            "ikl,kj,lj->ij",
+            x.astype(jnp.int32), b.astype(jnp.int32), c.astype(jnp.int32),
+            preferred_element_type=jnp.int32,
+        )
+    else:
+        acc_ref[...] += jnp.einsum(
+            "ikl,kj,lj->ij", x, b, c,
+            preferred_element_type=acc_ref.dtype,
+        )
+
+    last = jnp.logical_and(
+        pl.program_id(2) == pl.num_programs(2) - 1,
+        pl.program_id(3) == pl.num_programs(3) - 1,
+    )
+
+    @pl.when(last)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bi", "bj", "bk", "bl", "interpret", "out_dtype",
+        "dimension_semantics",
+    ),
+)
+def mttkrp(
+    x: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    *,
+    bi: int = 128,
+    bj: int = 128,
+    bk: int = 16,
+    bl: int = 16,
+    interpret: bool | None = None,
+    out_dtype=None,
+    dimension_semantics: tuple[str, ...] | None = None,
+) -> jax.Array:
+    """M[i,j] = sum_{k,l} X[i,k,l] * B[k,j] * C[l,j]."""
+    ni, nk, nl = x.shape
+    nk2, nj = b.shape
+    nl2, nj2 = c.shape
+    assert (nk, nl, nj) == (nk2, nl2, nj2), (x.shape, b.shape, c.shape)
+    assert ni % bi == 0 and nj % bj == 0 and nk % bk == 0 and nl % bl == 0, (
+        (ni, nj, nk, nl), (bi, bj, bk, bl))
+    if out_dtype is None:
+        out_dtype = runtime.out_dtype(x.dtype)
+    acc_dtype = runtime.acc_dtype(x.dtype)
+
+    grid = (ni // bi, nj // bj, nk // bk, nl // bl)
+    return pl.pallas_call(
+        mttkrp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, bk, bl), lambda i, j, k, l: (i, k, l)),
+            pl.BlockSpec((bk, bj), lambda i, j, k, l: (k, j)),
+            pl.BlockSpec((bl, bj), lambda i, j, k, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j, k, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ni, nj), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bi, bj), acc_dtype)],
+        interpret=runtime.resolve_interpret(interpret),
+        compiler_params=runtime.compiler_params(
+            dimension_semantics=(
+                dimension_semantics
+                or ("parallel", "parallel", "arbitrary", "arbitrary")
+            ),
+        ),
+    )(x, b, c)

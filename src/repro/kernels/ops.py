@@ -19,9 +19,13 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core.recurrence import JACOBI2D_OFFSETS
+
+from . import bmm as _bmm
 from . import conv2d as _conv
 from . import fir as _fir
 from . import fft2d as _fft
+from . import mttkrp as _mttkrp
 from . import widesa_mm as _mm
 
 
@@ -61,6 +65,92 @@ def matmul(
     out = _mm.matmul(ap, bp, bm=bm_, bn=bn_, bk=bk_, interpret=interpret,
                      dimension_semantics=dimension_semantics)
     return out[:m, :n]
+
+
+def bmm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool | None = None,
+    dimension_semantics: tuple[str, ...] | None = None,
+) -> jax.Array:
+    """C[b] = A[b] @ B[b] per batch, with automatic padding to the tiles."""
+    nb, m, k = a.shape
+    _, _, n = b.shape
+    bm_, bn_, bk_ = min(bm, m) or 1, min(bn, n) or 1, min(bk, k) or 1
+    ap = _pad_to(a, (1, bm_, bk_))
+    bp = _pad_to(b, (1, bk_, bn_))
+    out = _bmm.bmm(ap, bp, bm=bm_, bn=bn_, bk=bk_, interpret=interpret,
+                   dimension_semantics=dimension_semantics)
+    return out[:, :m, :n]
+
+
+def jacobi2d(
+    grid: jax.Array,
+    weights: jax.Array,
+    *,
+    bh: int = 128,
+    bw: int = 128,
+    interpret: bool | None = None,
+    dimension_semantics: tuple[str, ...] | None = None,
+) -> jax.Array:
+    """One weighted 5-point Jacobi sweep over the grid interior.
+
+    ``grid``: (H, W) field; ``weights``: (5,) star weights ordered as
+    ``recurrence.JACOBI2D_OFFSETS`` (centre, north, south, west, east).
+    Returns the (H-2, W-2) interior update.  The star is staged as a
+    shifted-point stack (the DMA-module analogue, same as conv/fir) and
+    contracted on the stacked-window kernel.
+    """
+    h, w = grid.shape
+    oh, ow = h - 2, w - 2
+    if oh <= 0 or ow <= 0:
+        raise ValueError(
+            f"jacobi2d needs a grid of at least 3x3 (got {grid.shape}): "
+            "the 5-point star has no interior to update")
+    stack = jnp.stack(
+        [grid[di : di + oh, dj : dj + ow] for di, dj in JACOBI2D_OFFSETS]
+    )  # (5, oh, ow)
+    bh_, bw_ = min(bh, oh) or 1, min(bw, ow) or 1
+    stack = _pad_to(stack, (1, bh_, bw_))
+    out = _conv.conv2d_stacked(
+        stack, weights, bh=bh_, bw=bw_, interpret=interpret,
+        dimension_semantics=dimension_semantics,
+    )
+    return out[:oh, :ow]
+
+
+def mttkrp(
+    x: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    *,
+    bi: int = 128,
+    bj: int = 128,
+    bk: int = 16,
+    bl: int = 16,
+    interpret: bool | None = None,
+    dimension_semantics: tuple[str, ...] | None = None,
+) -> jax.Array:
+    """M[i,j] = sum_{k,l} X[i,k,l] B[k,j] C[l,j], padded to the tiles.
+
+    Zero padding along k/l adds zero contributions, so the sliced result
+    is exact.
+    """
+    ni, nk, nl = x.shape
+    _, nj = b.shape
+    bi_, bj_ = min(bi, ni) or 1, min(bj, nj) or 1
+    bk_, bl_ = min(bk, nk) or 1, min(bl, nl) or 1
+    xp = _pad_to(x, (bi_, bk_, bl_))
+    bp = _pad_to(b, (bk_, bj_))
+    cp = _pad_to(c, (bl_, bj_))
+    out = _mttkrp.mttkrp(xp, bp, cp, bi=bi_, bj=bj_, bk=bk_, bl=bl_,
+                         interpret=interpret,
+                         dimension_semantics=dimension_semantics)
+    return out[:ni, :nj]
 
 
 def conv2d(

@@ -1,9 +1,15 @@
-"""Pure-jnp oracles for every kernel (the allclose ground truth)."""
+"""Pure-jnp oracles for every kernel (the allclose ground truth).
+
+One oracle per registered recurrence — the registry's KernelSpec.xla
+points here, so these double as codegen's 'xla' backend lowering.
+"""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.recurrence import JACOBI2D_OFFSETS
 
 
 def matmul(a, b):
@@ -13,6 +19,43 @@ def matmul(a, b):
             preferred_element_type=jnp.int32,
         )
     return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def bmm(a, b):
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        return jnp.einsum(
+            "bik,bkj->bij", a.astype(jnp.int32), b.astype(jnp.int32),
+            preferred_element_type=jnp.int32,
+        )
+    return jnp.einsum(
+        "bik,bkj->bij", a, b, preferred_element_type=jnp.float32
+    ).astype(a.dtype)
+
+
+def jacobi2d(grid, weights):
+    """Weighted 5-point Jacobi sweep over the interior (VALID)."""
+    h, w = grid.shape
+    oh, ow = h - 2, w - 2
+    acc = jnp.int32 if jnp.issubdtype(grid.dtype, jnp.integer) else jnp.float32
+    out = jnp.zeros((oh, ow), acc)
+    for s, (di, dj) in enumerate(JACOBI2D_OFFSETS):
+        out = out + grid[di : di + oh, dj : dj + ow].astype(acc) * weights[
+            s
+        ].astype(acc)
+    return out
+
+
+def mttkrp(x, b, c):
+    """M[i,j] = sum_{k,l} X[i,k,l] B[k,j] C[l,j]."""
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return jnp.einsum(
+            "ikl,kj,lj->ij",
+            x.astype(jnp.int32), b.astype(jnp.int32), c.astype(jnp.int32),
+            preferred_element_type=jnp.int32,
+        )
+    return jnp.einsum(
+        "ikl,kj,lj->ij", x, b, c, preferred_element_type=jnp.float32
+    )
 
 
 def conv2d(img, filt):

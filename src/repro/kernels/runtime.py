@@ -13,14 +13,17 @@ Two jobs:
    for DTYPE_BYTES/PACKING between the cost model and the runtime).
 
 2. **``execute_plan(plan, *operands)``.**  A single entry point that takes
-   a ``mapper.ExecutionPlan`` and dispatches to the right kernel
-   (widesa_mm / fir / conv2d / fft2d) with block shapes, grid and
-   dimension semantics derived *from the plan* — the per-kernel tile
-   heuristics live in the mapper's partition search, not in call sites.
+   a ``mapper.ExecutionPlan``, looks up the recurrence's ``KernelSpec`` in
+   ``kernels/registry.py``, and invokes its Pallas lowering with block
+   shapes, grid and dimension semantics derived *from the plan* — the
+   per-kernel tile heuristics live in the mapper's partition search, and
+   the per-recurrence contract (arity, grid loops, tile kwargs) lives in
+   the registry, not in call sites.
 
 Codegen's pallas backend, ops-level callers and the benchmarks all route
 through this module, which makes the mapper's ExecutionPlan the executable
-contract rather than a planning artifact.
+contract rather than a planning artifact.  An unregistered recurrence
+raises ``registry.UnregisteredRecurrenceError`` from every entry point.
 """
 
 from __future__ import annotations
@@ -146,71 +149,42 @@ def plan_kernel_kwargs(plan: "ExecutionPlan") -> dict:
     """Kernel-call kwargs (block shapes + dimension semantics) from a plan.
 
     The partition's per-loop block extents become the Pallas BlockSpec
-    tiles; the schedule's space/time split plus the recurrence's reduction
-    loops become the grid's dimension semantics.
+    tiles (via the recurrence's registered ``KernelSpec.block_kwargs``);
+    the spec's grid loops plus the recurrence's reduction loops become the
+    grid's dimension semantics.  Raises ``UnregisteredRecurrenceError``
+    for recurrences without a KernelSpec.
     """
+    from . import registry
+
     rec = plan.recurrence
-    blk = plan.partition.block
-    name = rec.name
-    if name in ("mm", "fft2d_stage"):
-        return {
-            "bm": blk.get("i", MXU_LANES),
-            "bn": blk.get("j", MXU_LANES),
-            "bk": blk.get("k", MXU_LANES),
-            "dimension_semantics": grid_semantics(rec, ("i", "j", "k")),
-        }
-    if name == "conv2d":
-        return {
-            "bh": blk.get("h", MXU_LANES),
-            "bw": blk.get("w", MXU_LANES),
-            "dimension_semantics": grid_semantics(rec, ("h", "w", ("p", "q"))),
-        }
-    if name == "fir":
-        return {
-            "bn": blk.get("n", 1024),
-            "dimension_semantics": grid_semantics(rec, ("n",)),
-        }
-    raise NotImplementedError(f"no kernel for recurrence {name!r}")
-
-
-_OPERAND_ARITY = {"mm": 2, "fft2d_stage": 2, "conv2d": 2, "fir": 2}
+    spec = registry.get(rec.name)
+    kw = dict(spec.block_kwargs(plan))
+    kw["dimension_semantics"] = grid_semantics(rec, spec.grid_loops)
+    return kw
 
 
 def execute_plan(plan: "ExecutionPlan", *operands, interpret: bool | None = None):
     """Execute an ExecutionPlan on concrete operands via its Pallas kernel.
 
-    Dispatch (operands follow the recurrence builders in core/recurrence):
-
-        mm           (a[m,k], b[k,n])        -> C = A @ B
-        conv2d       (img[h,w], filt[p,q])   -> VALID 2-D correlation
-        fir          (x[n], taps[t])         -> VALID FIR
-        fft2d_stage  (x_re[r,c], x_im[r,c])  -> 2-D DFT (both MM stages run
-                                                with this stage's tiles)
+    Dispatch is a ``kernels/registry.py`` lookup: the recurrence's
+    ``KernelSpec`` declares the operand arity and the Pallas lowering
+    (an ops.py staging wrapper — see each spec for the operand
+    convention, e.g. mm takes ``(a[m,k], b[k,n])``, mttkrp takes
+    ``(x[i,k,l], b[k,j], c[l,j])``).
 
     Block shapes, grid and dimension semantics come from the plan; the
     staging-layer data movement (padding, window stacking, complex
     lowering) is ops.py's, unchanged.  ``interpret=None`` resolves to the
     backend default (interpret off TPU).
     """
-    from . import ops  # local import: ops imports the kernels importing us
+    from . import registry
 
     rec = plan.recurrence
-    arity = _OPERAND_ARITY.get(rec.name)
-    if arity is None:
-        raise NotImplementedError(f"no kernel for recurrence {rec.name!r}")
-    if len(operands) != arity:
+    spec = registry.get(rec.name)
+    if len(operands) != spec.arity:
         raise ValueError(
-            f"{rec.name} expects {arity} operands, got {len(operands)}")
+            f"{rec.name} expects {spec.arity} operands, got {len(operands)}")
     kw = plan_kernel_kwargs(plan)
     sem = kw.pop("dimension_semantics")
-    interp = resolve_interpret(interpret)
-    if rec.name == "mm":
-        return ops.matmul(*operands, **kw, dimension_semantics=sem,
-                          interpret=interp)
-    if rec.name == "fft2d_stage":
-        return ops.fft2d(*operands, **kw, dimension_semantics=sem,
-                         interpret=interp)
-    if rec.name == "conv2d":
-        return ops.conv2d(*operands, **kw, dimension_semantics=sem,
-                          interpret=interp)
-    return ops.fir(*operands, **kw, dimension_semantics=sem, interpret=interp)
+    return spec.pallas(*operands, **kw, dimension_semantics=sem,
+                       interpret=resolve_interpret(interpret))

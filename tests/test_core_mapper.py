@@ -7,14 +7,21 @@ import pytest
 from repro.core import (
     AIE_TARGET,
     Target,
+    batched_matmul,
     best_plan,
     conv2d,
     fir,
+    jacobi2d,
     lower_plan,
     map_recurrence,
     matmul,
+    mttkrp,
 )
-from repro.core.mapper import predict_bounds
+from repro.core.mapper import (
+    plan_cache_clear,
+    plan_cache_info,
+    predict_bounds,
+)
 
 
 def test_plans_ranked_feasible_first():
@@ -83,6 +90,43 @@ def test_codegen_conv_fir():
     x = jnp.asarray(rng.standard_normal(512), jnp.float32)
     h = jnp.asarray(rng.standard_normal(15), jnp.float32)
     assert fn(x, h).shape == (498,)
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper workloads: bmm / jacobi2d / mttkrp through the full pipeline
+# ---------------------------------------------------------------------------
+
+_NEW_RECURRENCES = [
+    (batched_matmul, (4, 64, 64, 32)),
+    (jacobi2d, (62, 62)),
+    (mttkrp, (64, 48, 16, 8)),
+]
+
+
+@pytest.mark.parametrize("builder,args", _NEW_RECURRENCES)
+@pytest.mark.parametrize("target", [Target(), AIE_TARGET],
+                         ids=["tpu_pod", "aie"])
+def test_new_recurrences_feasible(builder, args, target):
+    """bmm, jacobi2d and mttkrp each map to a feasible plan on both the
+    TPU-pod and the paper's VCK5000 targets."""
+    plan = best_plan(builder(*args), target)
+    assert plan.feasible, plan.describe()
+    assert plan.predicted_tops > 0
+    assert plan.partition.block  # kernel tiles derived for every loop
+    assert set(plan.partition.block) == set(plan.recurrence.loops)
+
+
+@pytest.mark.parametrize("builder,args", _NEW_RECURRENCES)
+def test_new_recurrences_plan_cache_hits(builder, args):
+    """Re-mapping an equal-but-distinct recurrence hits the LRU cache."""
+    plan_cache_clear()
+    p1 = best_plan(builder(*args), Target())
+    misses = plan_cache_info().misses
+    p2 = best_plan(builder(*args), Target())
+    ci = plan_cache_info()
+    assert ci.misses == misses
+    assert ci.hits >= 1
+    assert p1 == p2
 
 
 def test_predicted_utilization_high_for_mm():

@@ -1,12 +1,25 @@
-"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+"""Backend parity for every registered recurrence, plus kernel-specific
+shape/tile sweeps.
+
+The parity suite is registry-driven: one parametrized test asserts
+pallas ≡ xla through ``lower_plan`` for every KernelSpec x dtype it
+declares, and a subprocess test runs the chip-level systolic/allgather
+schedules for every spec with ``supports_systolic`` — adding a recurrence
+to the registry automatically adds it here.
+"""
+
+import subprocess
+import sys
 
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels import ops, ref
+from repro.core import Target, best_plan, lower_plan
+from repro.kernels import ops, ref, registry
 
 RNG = np.random.default_rng(42)
+CHIP = Target(name="single_chip", mesh_shape=(1, 1))
 
 
 def _mk(shape, dtype):
@@ -16,24 +29,115 @@ def _mk(shape, dtype):
 
 
 # ---------------------------------------------------------------------------
-# matmul: dtype x shape sweep
+# registry-driven backend parity: pallas == xla for every KernelSpec
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("dtype,atol", [
-    ("float32", 1e-3), ("int8", 0), ("int16", 0),
-])
+PARITY_CASES = [
+    (spec.name, dtype)
+    for spec in registry.specs()
+    for dtype in spec.parity_dtypes
+]
+
+
+def test_parity_covers_all_registered_recurrences():
+    assert {n for n, _ in PARITY_CASES} == set(registry.registered_names())
+    # acceptance floor: paper set + the three beyond-paper workloads
+    assert {"mm", "conv2d", "fir", "fft2d_stage",
+            "bmm", "jacobi2d", "mttkrp"} <= set(registry.registered_names())
+
+
+@pytest.mark.parametrize("name,dtype", PARITY_CASES)
+def test_backend_parity_pallas_vs_xla(name, dtype):
+    spec = registry.get(name)
+    rec = spec.builder(*spec.smoke_args, dtype)
+    plan = best_plan(rec, CHIP)
+    operands = spec.operands(rec, RNG)
+    pallas = lower_plan(plan, backend="pallas", interpret=True)
+    xla = lower_plan(plan, backend="xla")
+    out, expect = pallas(*operands), xla(*operands)
+    outs = out if isinstance(out, tuple) else (out,)
+    exps = expect if isinstance(expect, tuple) else (expect,)
+    # integer dtypes must match bit-exactly (int32 accumulator ladder)
+    exact = dtype.startswith("int")
+    for o, e in zip(outs, exps):
+        np.testing.assert_allclose(
+            np.asarray(o, np.float64), np.asarray(e, np.float64),
+            atol=0.0 if exact else spec.atol, rtol=0.0 if exact else 1e-3)
+
+
+_SYSTOLIC_CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, "src")
+import numpy as np, jax
+from repro.compat import make_mesh
+from repro.core import Target, best_plan, lower_plan
+from repro.kernels import registry
+
+rng = np.random.default_rng(3)
+mesh = make_mesh((2, 2), ("data", "model"))
+target = Target(mesh_shape=(2, 2))
+for spec in registry.specs():
+    if not spec.supports_systolic:
+        continue
+    for dtype in spec.parity_dtypes:
+        rec = spec.builder(*spec.smoke_args, dtype)
+        plan = best_plan(rec, target)
+        operands = spec.operands(rec, rng)
+        expect = np.asarray(lower_plan(plan, backend="xla")(*operands))
+        for backend in ("systolic", "allgather"):
+            fn = lower_plan(plan, backend=backend, mesh=mesh)
+            out = np.asarray(jax.jit(fn)(*operands))
+            exact = dtype.startswith("int")
+            ok = np.allclose(out.astype(np.float64),
+                             expect.astype(np.float64),
+                             atol=0.0 if exact else 1e-2,
+                             rtol=0.0 if exact else 1e-3)
+            print(f"{spec.name}/{dtype}/{backend}:"
+                  f"{'OK' if ok else 'FAIL'}")
+"""
+
+
+def test_backend_parity_systolic_where_supported():
+    """Chip-level schedules match xla for every supports_systolic spec
+    (2x2 host-device mesh; int dtypes exact via the acc_dtype ladder)."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _SYSTOLIC_CODE], capture_output=True,
+        text=True, cwd=".", timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    lines = [ln for ln in proc.stdout.splitlines() if ":" in ln]
+    assert lines, proc.stdout
+    bad = [ln for ln in lines if not ln.endswith("OK")]
+    assert not bad, bad
+    # every systolic-capable spec x dtype must have been exercised
+    want = sum(
+        2 * len(s.parity_dtypes)
+        for s in registry.specs() if s.supports_systolic)
+    assert len(lines) == want, (len(lines), want, proc.stdout)
+
+
+def test_unregistered_recurrence_error():
+    """One well-formed error from every layer for unknown recurrences."""
+    with pytest.raises(registry.UnregisteredRecurrenceError,
+                       match="no KernelSpec registered.*not_a_recurrence"):
+        registry.get("not_a_recurrence")
+
+
+# ---------------------------------------------------------------------------
+# matmul: shape/tile-specific sweeps (parity above covers the dtype axis)
+# ---------------------------------------------------------------------------
+
 @pytest.mark.parametrize("shape", [
     (128, 128, 128), (192, 160, 136), (64, 256, 96), (33, 65, 17),
 ])
-def test_matmul_sweep(dtype, atol, shape):
+def test_matmul_odd_shapes(shape):
     m, n, k = shape
-    a = jnp.asarray(_mk((m, k), dtype))
-    b = jnp.asarray(_mk((k, n), dtype))
+    a = jnp.asarray(_mk((m, k), "float32"))
+    b = jnp.asarray(_mk((k, n), "float32"))
     out = ops.matmul(a, b, bm=64, bn=64, bk=64)
-    expect = ref.matmul(a, b)
     np.testing.assert_allclose(
-        np.asarray(out, np.float64), np.asarray(expect, np.float64),
-        atol=atol, rtol=1e-3)
+        np.asarray(out), np.asarray(ref.matmul(a, b)), atol=1e-3, rtol=1e-3)
 
 
 def test_matmul_bf16():
@@ -59,39 +163,68 @@ def test_matmul_tile_sweep(tiles):
 
 
 # ---------------------------------------------------------------------------
-# conv2d
+# conv2d / fir: odd-shape and window-size staging sweeps
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("dtype", ["float32", "int8", "int16"])
 @pytest.mark.parametrize("hw,pq", [((70, 66), (4, 4)), ((40, 44), (8, 8)),
                                    ((33, 37), (4, 4))])
-def test_conv2d_sweep(dtype, hw, pq):
-    img = jnp.asarray(_mk(hw, dtype))
-    filt = jnp.asarray(_mk(pq, dtype))
+def test_conv2d_odd_shapes(hw, pq):
+    img = jnp.asarray(_mk(hw, "float32"))
+    filt = jnp.asarray(_mk(pq, "float32"))
     out = ops.conv2d(img, filt, bh=16, bw=16)
-    expect = ref.conv2d(img, filt)
-    atol = 0 if dtype.startswith("int") else 1e-3
     np.testing.assert_allclose(
-        np.asarray(out, np.float64), np.asarray(expect, np.float64),
-        atol=atol, rtol=1e-4)
+        np.asarray(out), np.asarray(ref.conv2d(img, filt)), atol=1e-3,
+        rtol=1e-4)
 
 
-# ---------------------------------------------------------------------------
-# fir
-# ---------------------------------------------------------------------------
-
-@pytest.mark.parametrize("dtype", ["float32", "int8", "int16"])
 @pytest.mark.parametrize("n,taps", [(1000, 15), (512, 15), (257, 7)])
-def test_fir_sweep(dtype, n, taps):
-    x = jnp.asarray(_mk((n,), dtype))
-    h = jnp.asarray(_mk((taps,), dtype))
+def test_fir_odd_shapes(n, taps):
+    x = jnp.asarray(_mk((n,), "float32"))
+    h = jnp.asarray(_mk((taps,), "float32"))
     out = ops.fir(x, h, bn=128)
-    expect = ref.fir(x, h)
-    atol = 0 if dtype.startswith("int") else 1e-3
     np.testing.assert_allclose(
-        np.asarray(out, np.float64), np.asarray(expect, np.float64),
-        atol=atol, rtol=1e-4)
+        np.asarray(out), np.asarray(ref.fir(x, h)), atol=1e-3, rtol=1e-4)
 
+
+# ---------------------------------------------------------------------------
+# new workloads: odd-shape staging (padding/slicing) sweeps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(3, 64, 48, 40), (2, 33, 65, 17)])
+def test_bmm_odd_shapes(shape):
+    b, m, n, k = shape
+    a = jnp.asarray(_mk((b, m, k), "float32"))
+    bb = jnp.asarray(_mk((b, k, n), "float32"))
+    out = ops.bmm(a, bb, bm=32, bn=32, bk=32)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.bmm(a, bb)), atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("hw", [(70, 66), (33, 37)])
+def test_jacobi2d_odd_shapes(hw):
+    grid = jnp.asarray(_mk(hw, "float32"))
+    w = jnp.asarray(np.full((5,), 0.2, np.float32))
+    out = ops.jacobi2d(grid, w, bh=16, bw=16)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.jacobi2d(grid, w)), atol=1e-3,
+        rtol=1e-3)
+
+
+@pytest.mark.parametrize("shape", [(40, 24, 10, 6), (33, 17, 8, 8)])
+def test_mttkrp_odd_shapes(shape):
+    i, j, k, l = shape  # noqa: E741
+    x = jnp.asarray(_mk((i, k, l), "float32"))
+    b = jnp.asarray(_mk((k, j), "float32"))
+    c = jnp.asarray(_mk((l, j), "float32"))
+    out = ops.mttkrp(x, b, c, bi=16, bj=16, bk=4, bl=4)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.mttkrp(x, b, c)), atol=1e-2,
+        rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fir / fft2d: staging-specific paths not covered by the parity sweep
+# ---------------------------------------------------------------------------
 
 def test_fir_complex():
     xs = [jnp.asarray(_mk((400,), "float32")) for _ in range(2)]
@@ -103,10 +236,6 @@ def test_fir_complex():
     np.testing.assert_allclose(np.asarray(o_im), np.asarray(e_im),
                                atol=1e-3)
 
-
-# ---------------------------------------------------------------------------
-# fft2d (four-step matmul form)
-# ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("three_mult", [True, False])
 @pytest.mark.parametrize("rc", [(64, 64), (128, 64), (32, 128)])
