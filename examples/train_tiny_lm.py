@@ -11,6 +11,14 @@ import argparse
 import dataclasses
 import os
 
+# This example trains a ~100M-param model on CPU, where the planned
+# Pallas kernels run in interpret mode (10-40x slower than XLA) — at this
+# size that turns a ~3-minute run into an hour.  Default to the facade's
+# XLA fallback here (the planned path is exercised by the test suite,
+# bench_planned and the serve smoke); export REPRO_PLANNED=on to force
+# mapper-planned kernels anyway, e.g. on a real TPU.
+os.environ.setdefault("REPRO_PLANNED", "off")
+
 from repro.configs import get_config
 from repro.configs.base import ShapeSpec
 from repro.train import Trainer, TrainConfig

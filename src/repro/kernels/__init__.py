@@ -12,6 +12,9 @@
     fft2d.py      — 2-D FFT as four-step matmul stages (MXU-native)
     mttkrp.py     — MTTKRP (tensor-decomposition hot loop)
     ops.py        — jit'd public wrappers (staging layer / DMA analogue)
+    planned.py    — planned-execution facade: planned_dense/planned_bmm
+                    route model & serving GEMMs through best_plan ->
+                    execute_plan with an XLA fallback + per-site report
     ref.py        — pure-jnp oracles (= the registry's XLA lowerings)
 
 All kernels validate in interpret=True mode on CPU; BlockSpecs are written
@@ -20,11 +23,19 @@ kernel = an IR builder in core/recurrence.py + one registry entry (README:
 'Adding a new recurrence').
 """
 
-from . import ops, ref, registry, runtime
+from . import ops, planned, ref, registry, runtime
+from .planned import (
+    planned_bmm,
+    planned_dense,
+    planned_report,
+    planned_report_clear,
+)
 from .registry import KernelSpec, UnregisteredRecurrenceError
 from .runtime import execute_plan
 
 __all__ = [
-    "ops", "ref", "registry", "runtime",
+    "ops", "planned", "ref", "registry", "runtime",
     "KernelSpec", "UnregisteredRecurrenceError", "execute_plan",
+    "planned_dense", "planned_bmm", "planned_report",
+    "planned_report_clear",
 ]

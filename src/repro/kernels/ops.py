@@ -75,6 +75,7 @@ def bmm(
     bn: int = 128,
     bk: int = 128,
     interpret: bool | None = None,
+    out_dtype=None,
     dimension_semantics: tuple[str, ...] | None = None,
 ) -> jax.Array:
     """C[b] = A[b] @ B[b] per batch, with automatic padding to the tiles."""
@@ -84,6 +85,7 @@ def bmm(
     ap = _pad_to(a, (1, bm_, bk_))
     bp = _pad_to(b, (1, bk_, bn_))
     out = _bmm.bmm(ap, bp, bm=bm_, bn=bn_, bk=bk_, interpret=interpret,
+                   out_dtype=out_dtype,
                    dimension_semantics=dimension_semantics)
     return out[:, :m, :n]
 

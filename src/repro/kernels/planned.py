@@ -1,0 +1,286 @@
+"""Planned-execution facade: model/serve GEMMs routed through the mapper.
+
+The WideSA claim is that one space-time mapping pipeline — not per-kernel
+hand tuning — should pick the tiling for every uniform recurrence.  This
+module is where the *application* stack (models/layers.py, serve/engine.py)
+cashes that in: ``planned_dense(x, w)`` and ``planned_bmm(a, b)`` normalize
+the call-site shapes onto the registered ``mm``/``bmm`` recurrences, ask
+``core.mapper.best_plan`` for the mapping (shape-keyed, hitting the
+existing LRU plan cache) and dispatch through ``runtime.execute_plan``.
+
+Fallback rules (all land on the registry's XLA reference lowering, so the
+two paths are interchangeable):
+
+  * ``REPRO_PLANNED=off`` (or ``0``/``false``/``no``) — global escape hatch,
+    read at trace time;
+  * dtypes the MXU contract does not cover (or mismatched operand dtypes);
+  * shapes the mapper cannot produce a *feasible* plan for (degenerate
+    extents, ragged heads, tiny decode dims that defeat the PLIO model).
+
+Both entry points carry a ``jax.custom_vjp`` whose backward GEMMs are
+planned through the same facade, so training traffic (value_and_grad
+through the model stack) runs on mapper-planned tiles in both directions.
+
+``planned_report()`` exposes per-call-site counters (planned vs fallback,
+fallback reasons, the plan actually used) so benches and tests can assert
+which call sites executed mapper-planned kernels.  Decisions happen at
+*trace* time: a jitted model counts once per compilation, not once per
+step — which is exactly the "plan once per shape, execute many" contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import recurrence as ir
+from repro.core.mapper import ExecutionPlan, Target, best_plan
+
+from . import ref
+
+#: Environment escape hatch: set REPRO_PLANNED=off to force XLA everywhere.
+PLANNED_ENV = "REPRO_PLANNED"
+_OFF = frozenset({"off", "0", "false", "no"})
+
+#: Single-chip execution target for facade call sites.  A 1x8 sub-array is
+#: the smallest geometry on which the PLIO/congestion model produces
+#: *feasible* plans for the model-stack GEMM shapes (a 1x1 mesh has no
+#: column boundary to route over, so everything ranks infeasible).
+PLANNED_TARGET = Target(name="planned_chip", mesh_shape=(1, 8))
+
+#: Dtypes the mm/bmm kernel contract covers (see widesa_mm.py / bmm.py).
+SUPPORTED_DTYPES = frozenset(
+    {"float32", "bfloat16", "int8", "int16", "int32"})
+
+
+def planned_enabled() -> bool:
+    """The REPRO_PLANNED switch, read at call (= trace) time."""
+    return os.environ.get(PLANNED_ENV, "on").strip().lower() not in _OFF
+
+
+# ---------------------------------------------------------------------------
+# plan lookup (shape-keyed, backed by the mapper's LRU plan cache)
+# ---------------------------------------------------------------------------
+
+_BUILDERS = {"mm": ir.matmul, "bmm": ir.batched_matmul}
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_or_none(
+    kind: str, shape: tuple[int, ...], dtype: str, target: Target
+) -> ExecutionPlan | None:
+    """Best feasible plan for an mm/bmm shape, or None (-> XLA fallback).
+
+    ``shape`` is the *recurrence* extent tuple: (m, n, k) for mm,
+    (b, m, n, k) for bmm.  Caching the None outcome here keeps repeat
+    infeasible shapes from re-running the mapper search each trace.
+    """
+    if any(d <= 0 for d in shape):
+        return None
+    try:
+        plan = best_plan(_BUILDERS[kind](*shape, dtype), target)
+    except RuntimeError:
+        return None
+    return plan if plan.feasible else None
+
+
+def plan_for(kind: str, shape: tuple[int, ...], dtype: str,
+             target: Target | None = None) -> ExecutionPlan | None:
+    """Public shape->plan lookup used by benches and tests."""
+    return _plan_or_none(kind, tuple(int(d) for d in shape), dtype,
+                         target or PLANNED_TARGET)
+
+
+# ---------------------------------------------------------------------------
+# per-call-site report
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SiteStats:
+    """Trace-time decision counters for one facade call site."""
+
+    planned: int = 0
+    fallback: int = 0
+    reasons: dict = dataclasses.field(default_factory=dict)
+    last_shape: tuple = ()
+    last_plan: str = ""
+
+    def as_dict(self) -> dict:
+        return {
+            "planned": self.planned,
+            "fallback": self.fallback,
+            "reasons": dict(self.reasons),
+            "last_shape": self.last_shape,
+            "last_plan": self.last_plan,
+        }
+
+
+_REPORT: dict[str, SiteStats] = {}
+
+
+def _record(site: str, shape, *, plan=None, reason=None):
+    st = _REPORT.setdefault(site, SiteStats())
+    st.last_shape = tuple(shape)
+    if plan is not None:
+        st.planned += 1
+        st.last_plan = plan.describe()
+    else:
+        st.fallback += 1
+        st.reasons[reason] = st.reasons.get(reason, 0) + 1
+
+
+def planned_report() -> dict[str, dict]:
+    """Snapshot of per-site decisions: {site: {planned, fallback, ...}}."""
+    return {site: st.as_dict() for site, st in sorted(_REPORT.items())}
+
+
+def planned_report_clear() -> None:
+    _REPORT.clear()
+
+
+# ---------------------------------------------------------------------------
+# decision + dispatch
+# ---------------------------------------------------------------------------
+
+def _decide(kind: str, shape: tuple[int, ...], a_dtype, b_dtype):
+    """(plan, fallback_reason) for one GEMM call."""
+    if not planned_enabled():
+        return None, "disabled"
+    da, db = jnp.dtype(a_dtype).name, jnp.dtype(b_dtype).name
+    if da != db or da not in SUPPORTED_DTYPES:
+        return None, f"dtype:{da}x{db}"
+    plan = _plan_or_none(kind, shape, da, PLANNED_TARGET)
+    if plan is None:
+        return None, "infeasible"
+    return plan, None
+
+
+def _execute(plan: ExecutionPlan, *operands, out_dtype=None):
+    from .runtime import execute_plan  # late: avoids import cycles
+
+    return execute_plan(plan, *operands, out_dtype=out_dtype)
+
+
+# -- mm ---------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _mm_planned(site: str, x, w):
+    m, k = x.shape
+    n = w.shape[1]
+    plan, _ = _decide("mm", (m, n, k), x.dtype, w.dtype)
+    # the caller only enters here when _decide returned a plan; re-deriving
+    # it is a pure lru_cache hit, which keeps this function closure-free
+    # (custom_vjp primals must not capture tracers)
+    return _execute(plan, x, w)
+
+
+def _mm_planned_fwd(site, x, w):
+    return _mm_planned(site, x, w), (x, w)
+
+
+def _mm_planned_bwd(site, res, g):
+    x, w = res
+    dx = _dispatch_mm(g, w.T, site + "/bwd_dx")
+    dw = _dispatch_mm(x.T, g, site + "/bwd_dw")
+    return dx, dw
+
+
+_mm_planned.defvjp(_mm_planned_fwd, _mm_planned_bwd)
+
+
+def _dispatch_mm(x, w, site: str):
+    m, k = x.shape
+    n = w.shape[1]
+    plan, reason = _decide("mm", (m, n, k), x.dtype, w.dtype)
+    _record(site, (m, n, k), plan=plan, reason=reason)
+    if plan is None:
+        return ref.matmul(x, w)
+    return _mm_planned(site, x, w)
+
+
+def planned_dense(x, w, *, site: str = "dense"):
+    """``x @ w`` routed through the mapper.
+
+    ``x``: [..., K] (leading dims collapse to the recurrence's M extent);
+    ``w``: [K, N].  Returns [..., N] in the dtype the registered mm kernel
+    produces (input dtype for floats, int32 for int inputs — identical to
+    the XLA reference lowering, so planned and fallback paths agree).
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    m = int(math.prod(lead)) if lead else 1
+    out = _dispatch_mm(x.reshape(m, k), w, site)
+    return out.reshape(*lead, n)
+
+
+# -- bmm --------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _bmm_planned(site: str, out_dtype, a, b):
+    nb, m, k = a.shape
+    n = b.shape[2]
+    plan, _ = _decide("bmm", (nb, m, n, k), a.dtype, b.dtype)
+    return _execute(plan, a, b, out_dtype=out_dtype)
+
+
+def _bmm_planned_fwd(site, out_dtype, a, b):
+    return _bmm_planned(site, out_dtype, a, b), (a, b)
+
+
+def _bmm_planned_bwd(site, out_dtype, res, g):
+    a, b = res
+    da = _dispatch_bmm(g.astype(a.dtype), b.transpose(0, 2, 1),
+                       site + "/bwd_da")
+    db = _dispatch_bmm(a.transpose(0, 2, 1), g.astype(b.dtype),
+                       site + "/bwd_db")
+    return da, db
+
+
+_bmm_planned.defvjp(_bmm_planned_fwd, _bmm_planned_bwd)
+
+
+def _bmm_fallback(a, b, out_dtype):
+    if out_dtype is None:
+        return ref.bmm(a, b)
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        return ref.bmm(a, b).astype(out_dtype)
+    return jnp.einsum("bik,bkj->bij", a, b,
+                      preferred_element_type=out_dtype)
+
+
+def _dispatch_bmm(a, b, site: str, out_dtype=None):
+    nb, m, k = a.shape
+    n = b.shape[2]
+    plan, reason = _decide("bmm", (nb, m, n, k), a.dtype, b.dtype)
+    _record(site, (nb, m, n, k), plan=plan, reason=reason)
+    if plan is None:
+        return _bmm_fallback(a, b, out_dtype)
+    return _bmm_planned(site, out_dtype, a, b)
+
+
+def planned_bmm(a, b, *, site: str = "bmm", out_dtype=None):
+    """Batched ``a @ b`` routed through the mapper.
+
+    ``a``: [..., M, K]; ``b``: [..., K, N] with identical leading batch
+    dims (collapsed to the bmm recurrence's batch extent).  Returns
+    [..., M, N]; dtype semantics as ``planned_dense``, unless
+    ``out_dtype`` asks the kernel to flush its (fp32/int32) accumulator
+    at a specific dtype — einsum's ``preferred_element_type``, without
+    upcasting the operands (attention scores want fp32 out of bf16
+    inputs without materializing an fp32 KV-cache copy).
+    """
+    batch = a.shape[:-2]
+    if b.shape[:-2] != batch:
+        raise ValueError(f"batch dims differ: {a.shape} vs {b.shape}")
+    nb = int(math.prod(batch)) if batch else 1
+    m, k = a.shape[-2:]
+    n = b.shape[-1]
+    out = _dispatch_bmm(a.reshape(nb, m, k), b.reshape(nb, k, n), site,
+                        out_dtype)
+    return out.reshape(*batch, m, n)

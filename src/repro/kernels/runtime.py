@@ -163,7 +163,8 @@ def plan_kernel_kwargs(plan: "ExecutionPlan") -> dict:
     return kw
 
 
-def execute_plan(plan: "ExecutionPlan", *operands, interpret: bool | None = None):
+def execute_plan(plan: "ExecutionPlan", *operands,
+                 interpret: bool | None = None, out_dtype=None):
     """Execute an ExecutionPlan on concrete operands via its Pallas kernel.
 
     Dispatch is a ``kernels/registry.py`` lookup: the recurrence's
@@ -175,7 +176,10 @@ def execute_plan(plan: "ExecutionPlan", *operands, interpret: bool | None = None
     Block shapes, grid and dimension semantics come from the plan; the
     staging-layer data movement (padding, window stacking, complex
     lowering) is ops.py's, unchanged.  ``interpret=None`` resolves to the
-    backend default (interpret off TPU).
+    backend default (interpret off TPU).  ``out_dtype`` (kernels that
+    support it, e.g. mm/bmm) requests the accumulator flush dtype — the
+    MXU-native way to get fp32 results from low-precision operands
+    without materializing upcast inputs.
     """
     from . import registry
 
@@ -186,5 +190,7 @@ def execute_plan(plan: "ExecutionPlan", *operands, interpret: bool | None = None
             f"{rec.name} expects {spec.arity} operands, got {len(operands)}")
     kw = plan_kernel_kwargs(plan)
     sem = kw.pop("dimension_semantics")
+    if out_dtype is not None:
+        kw["out_dtype"] = out_dtype
     return spec.pallas(*operands, **kw, dimension_semantics=sem,
                        interpret=resolve_interpret(interpret))

@@ -1,7 +1,7 @@
 """Serving launcher CLI.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-        --requests 16 --max-new 8 [--smoke]
+        --requests 16 --max-new 8
 """
 
 from __future__ import annotations
@@ -20,7 +20,6 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--smoke", action="store_true", default=True)
     args = ap.parse_args()
 
     from repro.configs import get_smoke_config
@@ -44,6 +43,18 @@ def main():
     toks = sum(len(r.output) for r in done)
     print(f"served {len(done)} requests / {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s)")
+
+    from repro.kernels import planned_report
+    from repro.kernels.planned import planned_enabled
+    rows = [(site, st["planned"], st["fallback"])
+            for site, st in planned_report().items()
+            if "/bwd_" not in site]
+    print("planned GEMM call sites (site: planned/fallback traces):")
+    for site, n_planned, n_fallback in rows:
+        print(f"  {site}: {n_planned}/{n_fallback}")
+    if planned_enabled():
+        assert any(n for _, n, _ in rows), \
+            "serving executed no planned GEMMs"
 
 
 if __name__ == "__main__":

@@ -14,6 +14,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.planned import planned_dense
 from repro.parallel.sharding import constrain
 from . import layers as L
 
@@ -116,18 +117,21 @@ def _cross_attend(p, cfg, x, enc_k, enc_v):
     """x [B,Sq,d] queries against precomputed encoder K/V."""
     b, sq, _ = x.shape
     hq, hd = cfg.n_heads, cfg.hd
-    q = (x @ p["wq"]).reshape(b, sq, hq, hd)
+    q = planned_dense(x, p["wq"], site="xattn.q").reshape(b, sq, hq, hd)
     if cfg.qkv_bias:
         q = q + p["bq"].reshape(hq, hd)
     out = L.attention_core(q, enc_k, enc_v, causal=False)
-    return out.reshape(b, sq, hq * hd) @ p["wo"]
+    return planned_dense(out.reshape(b, sq, hq * hd), p["wo"],
+                         site="xattn.out")
 
 
 def _enc_kv(p, cfg, enc_out):
     b, s, _ = enc_out.shape
     hkv, hd = cfg.n_kv_heads, cfg.hd
-    k = (enc_out @ p["wk"]).reshape(b, s, hkv, hd)
-    v = (enc_out @ p["wv"]).reshape(b, s, hkv, hd)
+    k = planned_dense(enc_out, p["wk"], site="xattn.k").reshape(
+        b, s, hkv, hd)
+    v = planned_dense(enc_out, p["wv"], site="xattn.v").reshape(
+        b, s, hkv, hd)
     if cfg.qkv_bias:
         k = k + p["bk"].reshape(hkv, hd)
         v = v + p["bv"].reshape(hkv, hd)
@@ -178,7 +182,8 @@ def loss_fn(p, cfg, batch):
     """batch: frames [B,F,d], tokens [B,S], labels [B,S]."""
     enc_out = encode(p, cfg, batch["frames"])
     hidden = decode_train(p, cfg, batch["tokens"], enc_out)
-    logits = hidden @ p["embed"].T.astype(hidden.dtype)
+    logits = planned_dense(hidden, p["embed"].T.astype(hidden.dtype),
+                           site="lm_head")
     logits = constrain(logits, "batch", None, "vocab")
     labels = batch["labels"]
     lbl = jnp.maximum(labels, 0)
@@ -234,8 +239,9 @@ def prefill(p, cfg, frames, tokens, max_seq, cache_dtype=jnp.bfloat16):
         lp, ek, ev = inp
         h = L.apply_norm(lp["ln1"], cfg, x)
         q, k, v = L._qkv(lp["attn"], cfg, h, positions)
-        x = x + (L.attention_core(q, k, v, causal=True).reshape(b, s, -1)
-                 @ lp["attn"]["wo"])
+        x = x + planned_dense(
+            L.attention_core(q, k, v, causal=True).reshape(b, s, -1),
+            lp["attn"]["wo"], site="attn.out")
         h = L.apply_norm(lp["ln_x"], cfg, x)
         x = x + _cross_attend(lp["xattn"], cfg, h, ek, ev)
         h = L.apply_norm(lp["ln2"], cfg, x)
@@ -245,7 +251,8 @@ def prefill(p, cfg, frames, tokens, max_seq, cache_dtype=jnp.bfloat16):
     x, (ks, vs) = jax.lax.scan(body, x, (p["dec_layers"], enc_k, enc_v),
                                unroll=cfg.scan_unroll)
     x = L.apply_norm(p["ln_f"], cfg, x)
-    logits = (x[:, -1:] @ p["embed"].T.astype(x.dtype))[:, 0]
+    logits = planned_dense(x[:, -1:], p["embed"].T.astype(x.dtype),
+                           site="lm_head")[:, 0]
 
     cache = init_cache(cfg, b, max_seq, enc_k.shape[2], cache_dtype)
     pad = [(0, 0)] * 5
@@ -284,6 +291,7 @@ def decode_step(p, cfg, cache, tokens):
         (p["dec_layers"], cache["k"], cache["v"],
          cache["enc_k"], cache["enc_v"]), unroll=cfg.scan_unroll)
     x = L.apply_norm(p["ln_f"], cfg, x)
-    logits = (x @ p["embed"].T.astype(x.dtype))[:, 0]
+    logits = planned_dense(x, p["embed"].T.astype(x.dtype),
+                           site="lm_head")[:, 0]
     new_cache = dict(cache, k=ks, v=vs, pos=pos + 1)
     return logits, new_cache

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.parallel.sharding import constrain
+from repro.kernels.planned import planned_dense
 from . import layers as L
 from . import ssm as SSM
 
@@ -129,7 +130,8 @@ def forward(p, cfg, tokens):
 
 def loss_fn(p, cfg, batch):
     hidden = forward(p, cfg, batch["tokens"])
-    logits = hidden @ p["lm_head"].astype(hidden.dtype)
+    logits = planned_dense(hidden, p["lm_head"].astype(hidden.dtype),
+                           site="lm_head")
     logits = constrain(logits, "batch", None, "vocab").astype(jnp.float32)
     labels = batch["labels"]
     lbl = jnp.maximum(labels, 0)
@@ -225,7 +227,8 @@ def prefill(p, cfg, tokens, max_seq, cache_dtype=jnp.bfloat16):
             ssms.append(ssm_t)
 
     x = L.apply_norm(p["ln_f"], cfg, x)
-    logits = (x[:, -1:] @ p["lm_head"].astype(x.dtype))[:, 0]
+    logits = planned_dense(x[:, -1:], p["lm_head"].astype(x.dtype),
+                           site="lm_head")[:, 0]
 
     cache = init_cache(cfg, b, max_seq, cache_dtype)
     if napp:
@@ -301,5 +304,6 @@ def decode_step(p, cfg, cache, tokens):
         }
 
     x = L.apply_norm(p["ln_f"], cfg, x)
-    logits = (x @ p["lm_head"].astype(x.dtype))[:, 0]
+    logits = planned_dense(x, p["lm_head"].astype(x.dtype),
+                           site="lm_head")[:, 0]
     return logits, new_cache

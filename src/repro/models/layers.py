@@ -2,9 +2,12 @@
 
 Pure-function style: ``init_*`` returns a params dict (+ a parallel tree of
 logical sharding axes from ``*_specs``), ``apply`` functions are pure.  All
-matmuls are the paper's MM recurrence; their chip-level sharding comes from
-parallel.sharding rules (the WideSA space-time mapping), and on real TPU the
-per-chip tiles route through kernels.widesa_mm.
+matmuls are the paper's MM recurrence: projection/MLP GEMMs go through
+``kernels.planned.planned_dense`` and the attention score/value
+contractions through ``planned_bmm``, so every dense/attention/decode GEMM
+executes on mapper-planned tiles (with an XLA fallback for shapes the
+mapper rejects and a ``REPRO_PLANNED=off`` escape hatch).  Chip-level
+sharding still comes from parallel.sharding rules.
 """
 
 from __future__ import annotations
@@ -15,6 +18,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.planned import planned_bmm, planned_dense
 from repro.parallel.sharding import constrain
 
 
@@ -111,9 +115,9 @@ def attention_specs(cfg):
 def _qkv(p, cfg, x, positions):
     b, s, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    q = x @ p["wq"]
-    k = x @ p["wk"]
-    v = x @ p["wv"]
+    q = planned_dense(x, p["wq"], site="attn.q")
+    k = planned_dense(x, p["wk"], site="attn.k")
+    v = planned_dense(x, p["wv"], site="attn.v")
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(b, s, hq, hd)
@@ -130,15 +134,42 @@ def _qkv(p, cfg, x, positions):
     return q, k, v
 
 
+def _gqa_scores(qg, k, site):
+    """einsum("bqhgd,bkhd->bhgqk", preferred_element_type=f32) as a
+    planned bmm: operands stay in the compute dtype and the kernel
+    flushes its fp32 accumulator (no fp32 copy of the KV cache).
+
+    qg: [B,Sq,Hkv,G,hd]; k: [B,Skv,Hkv,hd].  The (B, Hkv) axes collapse to
+    the bmm batch, (G, Sq) to its M extent, hd is the contraction.
+    """
+    b, sq, hkv, group, hd = qg.shape
+    skv = k.shape[1]
+    qb = qg.transpose(0, 2, 3, 1, 4).reshape(b * hkv, group * sq, hd)
+    kb = k.transpose(0, 2, 3, 1).reshape(b * hkv, hd, skv)
+    s = planned_bmm(qb, kb, site=site, out_dtype=jnp.float32)
+    return s.reshape(b, hkv, group, sq, skv)
+
+
+def _gqa_values(w, v, site):
+    """einsum("bhgqk,bkhd->bqhgd") as a planned bmm.
+
+    w: [B,Hkv,G,Sq,Skv] (already in v.dtype); v: [B,Skv,Hkv,hd].
+    """
+    b, hkv, group, sq, skv = w.shape
+    hd = v.shape[-1]
+    wb = w.reshape(b * hkv, group * sq, skv)
+    vb = v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, hd)
+    out = planned_bmm(wb, vb, site=site)
+    return out.reshape(b, hkv, group, sq, hd).transpose(0, 3, 1, 2, 4)
+
+
 def sdpa(q, k, v, *, causal: bool, q_offset=None):
     """q: [B,Sq,Hq,hd]; k/v: [B,Skv,Hkv,hd] (GQA broadcast)."""
     b, sq, hq, hd = q.shape
     skv, hkv = k.shape[1], k.shape[2]
     group = hq // hkv
     qg = q.reshape(b, sq, hkv, group, hd)
-    logits = jnp.einsum(
-        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
-    ) / math.sqrt(hd)
+    logits = _gqa_scores(qg, k, "attn.scores") / math.sqrt(hd)
     if causal:
         qpos = jnp.arange(sq)[:, None] + (
             q_offset if q_offset is not None else 0
@@ -147,7 +178,7 @@ def sdpa(q, k, v, *, causal: bool, q_offset=None):
         mask = qpos >= kpos
         logits = jnp.where(mask[None, None, None], logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
-    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    out = _gqa_values(w, v, "attn.values")
     return out.reshape(b, sq, hq, hd)
 
 
@@ -304,7 +335,7 @@ def apply_attention(p, cfg, x, positions, *, causal=True):
     out = attention_core(q, k, v, causal=causal,
                          block_skip=cfg.causal_block_skip)
     out = out.reshape(b, s, cfg.n_heads * cfg.hd)
-    return out @ p["wo"]
+    return planned_dense(out, p["wo"], site="attn.out")
 
 
 def apply_attention_decode(p, cfg, x, cache_k, cache_v, pos):
@@ -328,17 +359,16 @@ def apply_attention_decode(p, cfg, x, cache_k, cache_v, pos):
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     group = hq // hkv
     qg = q.reshape(b, 1, hkv, group, hd)
-    logits = jnp.einsum(
-        "bqhgd,bkhd->bhgqk", qg, cache_k.astype(compute_dt),
-        preferred_element_type=jnp.float32,
+    logits = _gqa_scores(
+        qg, cache_k.astype(compute_dt), "attn.decode_scores"
     ) / math.sqrt(hd)
     kpos = jnp.arange(skv)[None, :]
     mask = kpos <= pos[:, None]
     logits = jnp.where(mask[:, None, None, None], logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1).astype(compute_dt)
-    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, cache_v.astype(compute_dt))
+    out = _gqa_values(w, cache_v.astype(compute_dt), "attn.decode_values")
     out = out.reshape(b, 1, hq * hd)
-    return out @ p["wo"], cache_k, cache_v
+    return planned_dense(out, p["wo"], site="attn.out"), cache_k, cache_v
 
 
 # ---------------------------------------------------------------------------
@@ -377,11 +407,12 @@ def mlp_specs(cfg):
 def apply_mlp(p, cfg, x):
     act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
     if cfg.mlp_glu:
-        h = act(x @ p["wg"]) * (x @ p["wu"])
+        h = act(planned_dense(x, p["wg"], site="mlp.gate")) * planned_dense(
+            x, p["wu"], site="mlp.up")
     else:
-        h = act(x @ p["wu"] + p["bu"])
+        h = act(planned_dense(x, p["wu"], site="mlp.up") + p["bu"])
     h = constrain(h, "batch", None, "ff")
-    out = h @ p["wd"]
+    out = planned_dense(h, p["wd"], site="mlp.down")
     if not cfg.mlp_glu:
         out = out + p["bd"]
     return out

@@ -13,6 +13,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.planned import planned_dense
 from repro.parallel.sharding import constrain
 from .layers import apply_rope, dense_init, rmsnorm, _dtype
 
@@ -61,10 +62,11 @@ def _queries(p, cfg, x, positions):
     b, s, _ = x.shape
     h, nope, rope = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
     if cfg.q_lora_rank:
-        cq = rmsnorm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
-        q = cq @ p["wuq"]
+        cq = rmsnorm(planned_dense(x, p["wdq"], site="mla.q_down"),
+                     p["q_norm"], cfg.norm_eps)
+        q = planned_dense(cq, p["wuq"], site="mla.q_up")
     else:
-        q = x @ p["wq"]
+        q = planned_dense(x, p["wq"], site="mla.q")
     q = q.reshape(b, s, h, nope + rope)
     qn, qr = q[..., :nope], q[..., nope:]
     qr = apply_rope(qr, positions, cfg.rope_theta)
@@ -73,8 +75,10 @@ def _queries(p, cfg, x, positions):
 
 
 def _latent(p, cfg, x, positions):
-    ckv = rmsnorm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)
-    kr = (x @ p["wkr"])[:, :, None, :]  # [B,S,1,rope] shared across heads
+    ckv = rmsnorm(planned_dense(x, p["wdkv"], site="mla.kv_down"),
+                  p["kv_norm"], cfg.norm_eps)
+    # [B,S,1,rope] shared across heads
+    kr = planned_dense(x, p["wkr"], site="mla.k_rope")[:, :, None, :]
     kr = apply_rope(kr, positions, cfg.rope_theta)
     return ckv, kr[:, :, 0, :]
 
@@ -94,8 +98,9 @@ def apply_mla(p, cfg, x, positions, *, causal=True):
     rope = cfg.rope_head_dim
     qn, qr = _queries(p, cfg, x, positions)
     ckv, kr = _latent(p, cfg, x, positions)
-    kn = (ckv @ p["wuk"]).reshape(b, s, h, nope)
-    v = (ckv @ p["wuv"]).reshape(b, s, h, vd)
+    kn = planned_dense(ckv, p["wuk"], site="mla.k_up").reshape(
+        b, s, h, nope)
+    v = planned_dense(ckv, p["wuv"], site="mla.v_up").reshape(b, s, h, vd)
     kn = constrain(kn, "batch", None, "heads", None)
     v = constrain(v, "batch", None, "heads", None)
     scale = 1.0 / math.sqrt(nope + rope)
@@ -109,7 +114,7 @@ def apply_mla(p, cfg, x, positions, *, causal=True):
             q_cat, k_cat, v, causal=causal, scale=scale,
             block_skip=cfg.causal_block_skip and causal)
         out = out.reshape(b, s, h * vd)
-        return out @ p["wo"]
+        return planned_dense(out, p["wo"], site="mla.out")
 
     logits = (
         jnp.einsum("bqhd,bkhd->bhqk", qn, kn,
@@ -123,7 +128,7 @@ def apply_mla(p, cfg, x, positions, *, causal=True):
         logits = jnp.where((qpos >= kpos)[None, None], logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     out = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, s, h * vd)
-    return out @ p["wo"]
+    return planned_dense(out, p["wo"], site="mla.out")
 
 
 def apply_mla_decode(p, cfg, x, cache_ckv, cache_kr, pos):
@@ -162,4 +167,5 @@ def apply_mla_decode(p, cfg, x, cache_ckv, cache_kr, pos):
     out_lat = jnp.einsum("bhqk,bkl->bqhl", w, cache_ckv)  # [B,1,H,kvl]
     wuv = p["wuv"].reshape(kvl, h, vd)
     out = jnp.einsum("bqhl,lhd->bqhd", out_lat, wuv).reshape(b, 1, h * vd)
-    return out @ p["wo"], cache_ckv, cache_kr
+    return (planned_dense(out, p["wo"], site="mla.out"),
+            cache_ckv, cache_kr)

@@ -24,6 +24,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.planned import planned_bmm, planned_dense
 from repro.parallel.sharding import constrain
 from .layers import dense_init, _dtype
 
@@ -110,12 +111,11 @@ def _dispatch_indices(cfg, ids, capacity):
 
 
 def _expert_ffn(cfg, wg, wu, wd, x):
-    """x: [E(_loc), C, d] -> [E(_loc), C, d]."""
+    """x: [E(_loc), C, d] -> [E(_loc), C, d] — the expert-stack bmm."""
     act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
-    h = act(jnp.einsum("ecd,edf->ecf", x, wg)) * jnp.einsum(
-        "ecd,edf->ecf", x, wu
-    )
-    return jnp.einsum("ecf,efd->ecd", h, wd)
+    h = act(planned_bmm(x, wg, site="moe.gate")) * planned_bmm(
+        x, wu, site="moe.up")
+    return planned_bmm(h, wd, site="moe.down")
 
 
 def moe_ffn_tokens(cfg, p, x_flat, *, local_experts=None):
@@ -130,7 +130,8 @@ def moe_ffn_tokens(cfg, p, x_flat, *, local_experts=None):
     capacity = max(
         1, int(math.ceil(t * k * cfg.moe_capacity_factor / e))
     )
-    logits = x_flat.astype(jnp.float32) @ p["router"]
+    logits = planned_dense(
+        x_flat.astype(jnp.float32), p["router"], site="moe.router")
     weights, ids, probs = route(cfg, logits)
     aux = load_balance_loss(cfg, probs[None], ids[None])
 
@@ -233,7 +234,8 @@ def apply_moe(p, cfg, x):
         y = y.reshape(b, s, d)
     if cfg.moe_shared_experts:
         act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
-        h = act(x @ p["shared_wg"]) * (x @ p["shared_wu"])
+        h = act(planned_dense(x, p["shared_wg"], site="moe.shared_gate")) * \
+            planned_dense(x, p["shared_wu"], site="moe.shared_up")
         h = constrain(h, "batch", None, "ff")
-        y = y + h @ p["shared_wd"]
+        y = y + planned_dense(h, p["shared_wd"], site="moe.shared_down")
     return y, aux

@@ -21,6 +21,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.planned import planned_dense
 from repro.parallel.sharding import constrain
 from . import layers as L
 from . import mla as MLA
@@ -191,7 +192,7 @@ def embed_tokens(p, cfg, tokens, extra_embeds=None):
     if extra_embeds is not None:
         pe = extra_embeds.astype(x.dtype)
         if "patch_proj" in p:
-            pe = pe @ p["patch_proj"]
+            pe = planned_dense(pe, p["patch_proj"], site="vlm.patch_proj")
         x = jnp.concatenate([pe, x], axis=1)
     return constrain(x, "batch", None, None)
 
@@ -210,7 +211,8 @@ def forward(p, cfg, tokens, extra_embeds=None):
 
 def logits_fn(p, cfg, hidden):
     head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
-    logits = hidden @ head.astype(hidden.dtype)
+    logits = planned_dense(hidden, head.astype(hidden.dtype),
+                           site="lm_head")
     return constrain(logits, "batch", None, "vocab")
 
 
@@ -386,7 +388,9 @@ def prefill(p, cfg, tokens, max_seq, cache_dtype=jnp.bfloat16,
             else:
                 q, k, v = L._qkv(lp["attn"], cfg, h, positions)
                 attn = L.attention_core(q, k, v, causal=True)
-                attn = attn.reshape(b, x.shape[1], -1) @ lp["attn"]["wo"]
+                attn = planned_dense(
+                    attn.reshape(b, x.shape[1], -1), lp["attn"]["wo"],
+                    site="attn.out")
                 entry = {"k": k.astype(cache_dtype),
                          "v": v.astype(cache_dtype)}
             x = x + attn

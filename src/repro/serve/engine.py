@@ -7,6 +7,14 @@ as a batch and their caches written into the free lanes
 token for ALL active lanes; finished lanes free immediately and new
 requests join without stalling the others — continuous batching.
 
+Every GEMM in the serving path (projections, MLP, decode attention, lm
+head) routes through ``kernels.planned``: ``load()`` traces the decode
+step once, so each GEMM shape is planned (``best_plan`` -> LRU plan cache)
+and AOT-compiled *before* traffic arrives, and every subsequent ``step()``
+reuses that executable — zero re-planning, zero re-compilation mid-flight.
+``plan_report`` holds the per-call-site planning snapshot taken at load
+time for introspection (which serving GEMMs run mapper-planned tiles).
+
 Greedy sampling (argmax); temperature hooks included but the engine is a
 systems artifact, not a quality one.
 """
@@ -21,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import planned
 from repro.models import build_model
 
 
@@ -50,10 +59,57 @@ class ServeEngine:
         self._next_rid = 0
         self._decode_jit = jax.jit(
             lambda p, c, t: self.api.decode(p, c, t))
+        self._decode_exec = None
+        self.plan_report: dict = {}
 
     def load(self, params):
+        """Install weights and plan + compile the serving GEMMs up front.
+
+        The decode step is traced and AOT-compiled here: tracing routes
+        every decode GEMM through ``kernels.planned`` (one ``best_plan``
+        per shape, memoized in the mapper's LRU cache) and ``step()``
+        then replays the compiled executable — no per-step re-planning.
+        If ``prompt_len`` was given, the prefill GEMM shapes are planned
+        ahead as well (abstract trace, no FLOPs).  ``plan_report`` keeps
+        only the decisions *this warmup* made (a delta against the
+        process-global report, so earlier unrelated traces don't leak in).
+        """
         self.params = params
         self.cache = self.api.init_cache(self.max_slots, self.max_seq)
+        before = {
+            site: (st["planned"], st["fallback"])
+            for site, st in planned.planned_report().items()
+        }
+        tokens0 = jnp.zeros((self.max_slots, 1), jnp.int32)
+        self._decode_exec = self._decode_jit.lower(
+            params, self.cache, tokens0).compile()
+        if self.prompt_len:
+            jax.eval_shape(
+                lambda p, b: self.api.prefill(p, b, self.max_seq),
+                params, self._prefill_spec())
+        delta = {}
+        for site, st in planned.planned_report().items():
+            done_planned, done_fallback = before.get(site, (0, 0))
+            d_planned = st["planned"] - done_planned
+            d_fallback = st["fallback"] - done_fallback
+            if d_planned or d_fallback:
+                delta[site] = dict(
+                    st, planned=d_planned, fallback=d_fallback)
+        self.plan_report = delta
+
+    def _prefill_spec(self):
+        """Abstract prefill batch for plan warmup — family-aware and
+        dtype-matched to ``model._token_batch_specs`` so the warmed
+        trace covers the same GEMM shapes real traffic will emit."""
+        spec = {"tokens": jax.ShapeDtypeStruct(
+            (1, self.prompt_len), jnp.int32)}
+        if self.cfg.family == "vlm":
+            spec["extra_embeds"] = jax.ShapeDtypeStruct(
+                (1, self.cfg.vlm_patches, self.cfg.d_model), jnp.bfloat16)
+        if self.cfg.family == "encdec":
+            spec["frames"] = jax.ShapeDtypeStruct(
+                (1, self.cfg.enc_frames, self.cfg.d_model), jnp.bfloat16)
+        return spec
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                extra: dict | None = None) -> int:
@@ -68,13 +124,29 @@ class ServeEngine:
         return [i for i, s in enumerate(self.slots) if s is None]
 
     def _write_lane(self, lane: int, prefill_cache):
-        """Copy a single-request prefill cache into lane ``lane``."""
+        """Copy a single-request prefill cache into lane ``lane``.
+
+        Dtypes must match exactly: both caches come from ``init_cache`` /
+        ``prefill`` with the config's kv-cache dtype, so a mismatch means
+        a caller handed in a cache built with different settings — and a
+        silent ``astype`` here would quietly narrow (e.g. fp32 prefill
+        state into an fp8 lane), corrupting the lane without a trace.
+        """
         def write(dst, src):
-            # dst: [..., max_slots, ...] with batch at axis 1 for stacked
-            # caches ([L, B, ...]) and axis 0 for pos ([B])
-            if dst.ndim == src.ndim and dst.shape[0] == self.max_slots:
+            if src.dtype != dst.dtype:
+                raise TypeError(
+                    f"prefill cache dtype {src.dtype} != engine cache "
+                    f"dtype {dst.dtype} (shape {src.shape} -> "
+                    f"{dst.shape}); rebuild the prefill cache with the "
+                    "engine's kv_cache_dtype instead of relying on a "
+                    "silent cast")
+            # batch axis: 0 for the 1-D pos leaf ([B]), 1 for stacked
+            # cache leaves ([L, B, ...], always ndim >= 3 across all
+            # families) — discriminating on shape[0] == max_slots instead
+            # corrupts lanes whenever n_layers happens to equal max_slots
+            if dst.ndim == 1:
                 return dst.at[lane].set(src[0])
-            return dst.at[:, lane].set(src[:, 0].astype(dst.dtype))
+            return dst.at[:, lane].set(src[:, 0])
 
         self.cache = jax.tree.map(write, self.cache, prefill_cache)
 
@@ -103,7 +175,8 @@ class ServeEngine:
         tokens = np.zeros((self.max_slots, 1), np.int32)
         for i in active:
             tokens[i, 0] = self.slots[i].output[-1]
-        logits, self.cache = self._decode_jit(
+        decode = self._decode_exec or self._decode_jit
+        logits, self.cache = decode(
             self.params, self.cache, jnp.asarray(tokens))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for i in active:
