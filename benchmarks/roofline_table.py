@@ -1,8 +1,20 @@
-"""Build the EXPERIMENTS.md §Roofline table from dry-run artifacts.
+"""Roofline tables: registry-driven structural bounds + dry-run artifacts.
 
-Reads results/dryrun/*.json (written by repro.launch.dryrun), derives the
-three roofline terms per cell, and prints the markdown table plus the
-per-cell bottleneck and one-line recommendation.
+Two sections (both emitted by ``run``, the ``--only roofline`` driver hook):
+
+1. **Registry bounds** (``registry_rows``): one ``predict_bounds`` row per
+   bench case of *every registered KernelSpec* — the case list IS the
+   registry (``repro/kernels/registry.py``), so a newly registered
+   recurrence shows up here with zero edits (closes the ROADMAP
+   "registry-driven roofline" item).  Columns are documented in
+   ``docs/architecture.md`` §Roofline-table columns.
+
+2. **Dry-run table** (``load``/``dryrun_rows``): the EXPERIMENTS.md
+   §Roofline table built from ``results/dryrun/*.json`` artifacts written
+   by ``repro.launch.dryrun`` (compiled-HLO rooflines of the model stack,
+   not structural predictions).
+
+    PYTHONPATH=src python benchmarks/roofline_table.py [--registry-only]
 """
 
 from __future__ import annotations
@@ -11,10 +23,81 @@ import glob
 import json
 import os
 
+from repro.core import AIE_TARGET
+from repro.core.mapper import Target, best_plan, predict_bounds
 from repro.core import roofline as RL
+from repro.kernels import registry
 
 CHIPS = {"16x16": 256, "2x16x16": 512}
 
+
+# ---------------------------------------------------------------------------
+# section 1: registry-driven structural bounds (one row per spec bench case)
+# ---------------------------------------------------------------------------
+
+def registry_rows(target: Target = AIE_TARGET) -> list[dict]:
+    """``predict_bounds`` for every (spec, bench case) in the registry."""
+    rows: list[dict] = []
+    for spec in registry.specs():
+        cases = spec.bench_cases or (("float32", spec.smoke_args),)
+        for dtype, args in cases:
+            rec = spec.builder(*args, dtype)
+            plan = best_plan(rec, target)
+            bounds = predict_bounds(rec, plan.partition, target)
+            arr = "x".join(str(t) for t in plan.partition.array_tiles)
+            if plan.partition.thread_factor > 1:
+                arr += f"*{plan.partition.thread_factor}"
+            binding = min(bounds, key=lambda k: bounds[k])
+            rows.append({
+                "bench": spec.name,
+                "dtype": dtype,
+                "array": arr,
+                "util": plan.predicted_utilization,
+                "compute": bounds["compute"],
+                "array_level": bounds["array_level"],
+                "end_to_end": bounds["end_to_end"],
+                "binding": binding,
+                "feasible": plan.feasible,
+            })
+    return rows
+
+
+def format_registry_table(rows: list[dict]) -> str:
+    head = (f"| {'bench':12s} | {'dtype':7s} | {'array':9s} | {'util':>6s} "
+            f"| {'compute':>8s} | {'array':>8s} | {'e2e':>8s} "
+            f"| {'binding':11s} | feas |")
+    # separator widths derived from the header so columns stay in sync
+    sep = "|" + "|".join("-" * len(c) for c in head.split("|")[1:-1]) + "|"
+    out = [head, sep]
+    for r in rows:
+        out.append(
+            f"| {r['bench']:12s} | {r['dtype']:7s} | {r['array']:9s} "
+            f"| {r['util']:6.3f} | {r['compute']:8.2f} "
+            f"| {r['array_level']:8.2f} | {r['end_to_end']:8.2f} "
+            f"| {r['binding']:11s} | {str(r['feasible']):>4s} |")
+    return "\n".join(out)
+
+
+def run_registry(csv_rows: list | None = None,
+                 target: Target = AIE_TARGET) -> list[dict]:
+    rows = registry_rows(target)
+    print(f"\n== Registry roofline: predict_bounds x {len(rows)} bench "
+          f"cases of {len(registry.specs())} registered specs "
+          f"({target.name}) ==")
+    print(format_registry_table(rows))
+    if csv_rows is not None:
+        for r in rows:
+            csv_rows.append((
+                f"roofline_registry_{r['bench']}_{r['dtype']}",
+                0.0,
+                f"array={r['array_level']:.2f}TOPS;e2e={r['end_to_end']:.2f}"
+                f"TOPS;binding={r['binding']};util={r['util']:.3f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# section 2: dry-run artifact table (EXPERIMENTS.md §Roofline)
+# ---------------------------------------------------------------------------
 
 def _rl_from_json(d: dict) -> RL.Roofline:
     coll_total = sum(v for v in d["coll"].values()) if d["coll"] else 0.0
@@ -65,7 +148,8 @@ def recommendation(r: RL.Roofline) -> str:
     return "compute-bound at good efficiency: scale batch or chips"
 
 
-def run(csv_rows: list | None = None, results_dir: str = "results/dryrun"):
+def run_dryrun(csv_rows: list | None = None,
+               results_dir: str = "results/dryrun"):
     for mesh in ("16x16", "2x16x16"):
         rows = load(results_dir, mesh)
         if not rows:
@@ -82,5 +166,19 @@ def run(csv_rows: list | None = None, results_dir: str = "results/dryrun"):
                     f"frac={r.roofline_fraction():.3f}"))
 
 
+def run(csv_rows: list | None = None, results_dir: str = "results/dryrun"):
+    run_registry(csv_rows)
+    run_dryrun(csv_rows, results_dir)
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--registry-only", action="store_true",
+                    help="only the registry-driven predict_bounds table")
+    args = ap.parse_args()
+    if args.registry_only:
+        run_registry()
+    else:
+        run()

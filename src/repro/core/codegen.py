@@ -1,22 +1,28 @@
 """ExecutionPlan -> executable JAX (paper §IV back half).
 
-Three backends:
+Four backends:
 
   'pallas'  — intra-chip Pallas kernel with the plan's BlockSpec tiles
               (interpret=True on CPU; Mosaic on real TPU).
   'xla'     — plain jnp reference path (used by the 512-device dry-run,
               since Mosaic only lowers for TPU targets).
   'systolic'— chip-level shard_map schedule: the plan's space loops become
-              mesh axes; flow/read dependences lower to lax.ppermute rings
-              (the AIE-DMA neighbour stream analogue), output dependences to
-              psum_scatter.  This is the paper's systolic design at pod
-              scale and the baseline for the §Perf collective hillclimb.
+              mesh axes; read/flow dependences lower to lax.ppermute
+              neighbour streams (the AIE-DMA edge analogue): Cannon rings
+              for mm/bmm, halo exchange for the jacobi2d stencils.  This
+              is the paper's systolic design at pod scale and the baseline
+              for the §Perf collective hillclimb.
+
+There is also 'allgather', the GSPMD broadcast baseline the systolic
+schedules are measured against (benchmarks/bench_mapping.py).
 
 Every backend resolves the recurrence through the KernelSpec registry
 (``repro/kernels/registry.py``): 'xla' uses the spec's reference lowering,
 'pallas' goes through ``runtime.execute_plan``, and the chip-level
-schedules check the spec's ``supports_systolic`` capability flag instead
-of hardcoding recurrence names.  An unregistered recurrence raises
+backends dispatch through the spec's ``systolic_lowering`` /
+``allgather_lowering`` hooks (implemented in ``repro/kernels/systolic.py``)
+— codegen carries no per-recurrence schedule of its own.  A spec without
+the hook raises NotImplementedError; an unregistered recurrence raises
 ``registry.UnregisteredRecurrenceError`` from any backend.
 """
 
@@ -24,12 +30,6 @@ from __future__ import annotations
 
 import functools
 from typing import Callable
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro.compat import shard_map as _shard_map
 
 from .mapper import ExecutionPlan
 
@@ -51,20 +51,6 @@ def _spec(plan: ExecutionPlan):
     return registry.get(plan.recurrence.name)
 
 
-def _out_dtype(in_dtype):
-    # single source of truth for the widening ladder (shared with kernels)
-    from repro.kernels import runtime
-
-    return runtime.out_dtype(in_dtype)
-
-
-def _acc_dtype(in_dtype):
-    # accumulator ladder: int operands widen to int32, floats to float32
-    from repro.kernels import runtime
-
-    return runtime.acc_dtype(in_dtype)
-
-
 # ---------------------------------------------------------------------------
 # backend: pallas (per-chip kernel with the plan's tiles)
 # ---------------------------------------------------------------------------
@@ -79,89 +65,8 @@ def _pallas_fn(plan: ExecutionPlan, interpret: bool | None = None) -> Callable:
 
 
 # ---------------------------------------------------------------------------
-# backend: systolic (chip-level shard_map schedule)
+# backend: systolic / allgather (chip-level shard_map schedules)
 # ---------------------------------------------------------------------------
-
-def _systolic_mm(plan: ExecutionPlan, mesh) -> Callable:
-    """Cannon-style systolic matmul over the plan's two space axes.
-
-    A is sharded (i->ax0, k->ax1); B is sharded (k->ax0, j->ax1); C comes out
-    sharded (i->ax0, j->ax1).  Each of the `steps` iterations multiplies the
-    local blocks then rotates A west / B north via ppermute — the direct
-    chip-level analogue of the paper's neighbour DMA streams, and it never
-    materializes a gathered operand (edge-bandwidth optimal).
-    """
-    axes = plan.target.mesh_axes
-    ax0, ax1 = axes[0], axes[1] if len(axes) > 1 else axes[0]
-    n0 = mesh.shape[ax0]
-    n1 = mesh.shape[ax1]
-    if n0 != n1:
-        raise ValueError("cannon schedule needs a square space array")
-    steps = n0
-
-    def local(a_blk, b_blk):
-        n = steps
-        # pre-skew with STATIC perms over the linearized (ax0, ax1) pair:
-        # A(i, k) -> A(i, (k+i) mod n) ; B(k, j) -> B((k+j) mod n, j)
-        skew_a = [(r * n + ((c + r) % n), r * n + c)
-                  for r in range(n) for c in range(n)]
-        skew_b = [(((r + c) % n) * n + c, r * n + c)
-                  for r in range(n) for c in range(n)]
-        a_blk = jax.lax.ppermute(a_blk, (ax0, ax1), skew_a)
-        b_blk = jax.lax.ppermute(b_blk, (ax0, ax1), skew_b)
-
-        acc_t = _acc_dtype(a_blk.dtype)
-
-        def body(step, carry):
-            a, b, acc = carry
-            acc = acc + jnp.dot(a, b, preferred_element_type=acc_t)
-            a = jax.lax.ppermute(
-                a, ax1, [((c + 1) % steps, c) for c in range(steps)]
-            )
-            b = jax.lax.ppermute(
-                b, ax0, [((r + 1) % steps, r) for r in range(steps)]
-            )
-            return a, b, acc
-
-        m, k = a_blk.shape
-        n = b_blk.shape[1]
-        acc = jnp.zeros((m, n), acc_t)
-        a_blk, b_blk, acc = jax.lax.fori_loop(
-            0, steps, body, (a_blk, b_blk, acc)
-        )
-        return acc.astype(_out_dtype(a_blk.dtype))
-
-    fn = _shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(ax0, ax1), P(ax0, ax1)),
-        out_specs=P(ax0, ax1),
-        check=False,
-    )
-    return fn
-
-
-def _allgather_mm(plan: ExecutionPlan, mesh) -> Callable:
-    """GSPMD-style baseline: all-gather B's k-shards then one local dot.
-    Used as the 'unconstrained compiler' reference in §Perf."""
-    axes = plan.target.mesh_axes
-    ax0, ax1 = axes[0], axes[1] if len(axes) > 1 else axes[0]
-
-    def local(a_blk, b_blk):
-        b_full = jax.lax.all_gather(b_blk, ax0, axis=0, tiled=True)
-        a_full = jax.lax.all_gather(a_blk, ax1, axis=1, tiled=True)
-        return jnp.dot(a_full, b_full,
-                       preferred_element_type=_acc_dtype(a_blk.dtype)
-                       ).astype(_out_dtype(a_blk.dtype))
-
-    return _shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(ax0, ax1), P(ax0, ax1)),
-        out_specs=P(ax0, ax1),
-        check=False,
-    )
-
 
 def lower_plan(
     plan: ExecutionPlan,
@@ -175,15 +80,18 @@ def lower_plan(
         return _pallas_fn(plan, interpret=interpret)
     if backend in ("systolic", "allgather"):
         assert mesh is not None
-        # the chip-level schedules are written for the plain (a, b) matmul
-        # operand contract; each KernelSpec declares whether it satisfies
-        # it (e.g. fft2d_stage is mm-shaped but streams (x_re, x_im)).
+        # chip-level schedules are per-recurrence shard_map programs
+        # (repro/kernels/systolic.py); each KernelSpec registers the hook
+        # for the operand contracts it satisfies (e.g. fft2d_stage is
+        # mm-shaped but streams (x_re, x_im), so it registers none).
         spec = _spec(plan)
-        if not spec.supports_systolic:
+        hook = (spec.systolic_lowering if backend == "systolic"
+                else spec.allgather_lowering)
+        if hook is None:
             raise NotImplementedError(
-                f"{backend} backend: recurrence {spec.name!r} declares "
-                "supports_systolic=False")
-        if backend == "systolic":
-            return _systolic_mm(plan, mesh)
-        return _allgather_mm(plan, mesh)
+                f"{backend} backend: recurrence {spec.name!r} registers no "
+                f"{backend} lowering hook (supports_systolic="
+                f"{spec.supports_systolic}) — see docs/systolic.md for the "
+                "spec-author contract")
+        return hook(plan, mesh)
     raise ValueError(f"unknown backend {backend}")

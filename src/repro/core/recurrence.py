@@ -16,6 +16,8 @@ and three beyond-paper workloads from the domains the paper names
 
     BMM      C[b,i,j] += A[b,i,k] * B[b,k,j]     (the model-stack shape)
     Jacobi2D O[i,j]   += G[i+di_s, j+dj_s] * w[s] (5-point stencil sweep)
+    Jacobi2D-MS  the same stencil iterated over a sweep loop t with a
+                 *flow* dependence (sweep t consumes sweep t-1's interior)
     MTTKRP   M[i,j]   += X[i,k,l] * B[k,j] * C[l,j] (tensor decomposition)
 
 Accesses are affine with unit coefficients (array index = subset of loop
@@ -292,6 +294,44 @@ def jacobi2d(h: int, w: int, dtype: str = "float32") -> UniformRecurrence:
             Access("G", (("i", 0), ("j", 0)), "read"),  # base point; star
             Access("W", (("s", 0),), "read"),           # offsets live in the
             Access("O", (("i", 0), ("j", 0)), "accum"),  # staged stack
+        ),
+        reduction_loops=frozenset({"s"}),
+        ops_per_point=2,
+        dtype=dtype,
+    )
+    r.validate()
+    return r
+
+
+def jacobi2d_multisweep(
+    h: int, w: int, sweeps: int, dtype: str = "float32"
+) -> UniformRecurrence:
+    """Time-iterated Jacobi: ``sweeps`` weighted 5-point sweeps over the
+    interior of an (h+2, w+2) grid with a fixed (Dirichlet) boundary ring.
+
+    The sweep loop ``t`` carries a *flow* dependence: sweep ``t`` consumes
+    the interior sweep ``t-1`` produced (``O`` is indexed by (i, j) but not
+    ``t``, and ``t`` is not a reduction loop, so ``dependences()`` derives
+    ``O: flow, distance (t, 1)``).  This is the dependence class the IR
+    always classified but no kernel consumed — the mapper must keep ``t``
+    temporal (see ``spacetime.candidate_space_loops``) and the chip-level
+    halo-exchange schedule forwards updated shard edges between sweeps
+    (``kernels/systolic.py``).
+
+    Weights are per-sweep, ``W[t, s]``: every lowering recovers the sweep
+    count from the weights operand's leading extent, so the (grid, weights)
+    arity-2 operand contract is shared with single-sweep ``jacobi2d``.
+    State promotes to the accumulator dtype (int -> int32) after the first
+    sweep; all backends share that ladder, keeping int parity bit-exact.
+    """
+    r = UniformRecurrence(
+        name="jacobi2d_ms",
+        loops=("t", "i", "j", "s"),
+        extents=(sweeps, h, w, len(JACOBI2D_OFFSETS)),
+        accesses=(
+            Access("G", (("i", 0), ("j", 0)), "read"),
+            Access("W", (("t", 0), ("s", 0)), "read"),
+            Access("O", (("i", 0), ("j", 0)), "accum"),
         ),
         reduction_loops=frozenset({"s"}),
         ops_per_point=2,

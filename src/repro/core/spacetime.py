@@ -62,12 +62,30 @@ class SystolicSchedule:
 
 
 def candidate_space_loops(rec: UniformRecurrence) -> list[str]:
-    """Loops on which all dependence distances are <= 1 in magnitude."""
+    """Loops on which all dependence distances are <= 1 in magnitude and
+    that carry no *flow* dependence.
+
+    The distance rule is the paper's "dependence distances no greater than
+    one" space-loop condition.  The flow rule is the chip-level legality
+    refinement for time-iterated recurrences (multi-sweep stencils): a flow
+    dependence along loop ``t`` carried by an array indexed only by the
+    *other* loops (e.g. jacobi2d_ms's ``O[i,j]`` across sweeps) transfers
+    the entire intermediate plane between consecutive ``t`` iterations.
+    Mapped to a space axis that is not a neighbour stream — every step the
+    full state would cross one array edge, which the congestion model
+    rejects for any non-trivial extent — so such loops stay temporal and
+    the dependence lowers to the halo exchange between sweeps instead.
+    (Output/read dependences are unaffected: partial-sum and reuse chains
+    along space loops are exactly the systolic neighbour streams.)
+    """
     deps = rec.dependences()
     out = []
     for loop in rec.loops:
-        if all(abs(d.dist(loop)) <= 1 for d in deps):
-            out.append(loop)
+        if any(abs(d.dist(loop)) > 1 for d in deps):
+            continue
+        if any(d.kind == "flow" and d.dist(loop) != 0 for d in deps):
+            continue
+        out.append(loop)
     return out
 
 

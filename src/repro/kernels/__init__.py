@@ -5,11 +5,17 @@
                     XLA lowerings, capabilities) in one place
     runtime.py    — plan-driven runtime: version-portable Pallas compat
                     shim + execute_plan(plan, *operands) registry dispatch
+    systolic.py   — chip-level shard_map schedules (Cannon rings for
+                    mm/bmm, halo exchange for the jacobi2d stencils, and
+                    the all-gather baselines) — the KernelSpec
+                    systolic_lowering/allgather_lowering hook targets
     widesa_mm.py  — systolic MM (the paper's flagship benchmark)
     bmm.py        — batched MM (the model-stack shape)
     conv2d.py     — 2-D conv as stacked-window MM recurrence
     fir.py        — FIR as stacked-window MM recurrence
     fft2d.py      — 2-D FFT as four-step matmul stages (MXU-native)
+    jacobi2d.py   — 5-point stencil kernel (single grid visit per tile;
+                    ops.jacobi2d_ms loops it over sweeps)
     mttkrp.py     — MTTKRP (tensor-decomposition hot loop)
     ops.py        — jit'd public wrappers (staging layer / DMA analogue)
     planned.py    — planned-execution facade: planned_dense/planned_bmm

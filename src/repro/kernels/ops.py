@@ -25,6 +25,7 @@ from . import bmm as _bmm
 from . import conv2d as _conv
 from . import fir as _fir
 from . import fft2d as _fft
+from . import jacobi2d as _jacobi
 from . import mttkrp as _mttkrp
 from . import widesa_mm as _mm
 
@@ -105,7 +106,7 @@ def jacobi2d(
     ``recurrence.JACOBI2D_OFFSETS`` (centre, north, south, west, east).
     Returns the (H-2, W-2) interior update.  The star is staged as a
     shifted-point stack (the DMA-module analogue, same as conv/fir) and
-    contracted on the stacked-window kernel.
+    contracted on the dedicated stencil kernel (``kernels/jacobi2d.py``).
     """
     h, w = grid.shape
     oh, ow = h - 2, w - 2
@@ -118,11 +119,45 @@ def jacobi2d(
     )  # (5, oh, ow)
     bh_, bw_ = min(bh, oh) or 1, min(bw, ow) or 1
     stack = _pad_to(stack, (1, bh_, bw_))
-    out = _conv.conv2d_stacked(
+    out = _jacobi.jacobi2d_stacked(
         stack, weights, bh=bh_, bw=bw_, interpret=interpret,
         dimension_semantics=dimension_semantics,
     )
     return out[:oh, :ow]
+
+
+def jacobi2d_ms(
+    grid: jax.Array,
+    weights: jax.Array,
+    *,
+    bh: int = 128,
+    bw: int = 128,
+    interpret: bool | None = None,
+    dimension_semantics: tuple[str, ...] | None = None,
+) -> jax.Array:
+    """Multi-sweep Jacobi: ``weights.shape[0]`` weighted 5-point sweeps.
+
+    ``weights``: (T, 5) per-sweep star weights — the sweep count rides in
+    the operand, so the (grid, weights) contract matches single-sweep
+    ``jacobi2d``.  Each sweep's interior is re-embedded into the fixed
+    boundary ring (Dirichlet boundary) before the next sweep consumes it:
+    the jacobi2d_ms recurrence's *flow* dependence on the sweep loop,
+    executed here as a host-level loop around the stencil kernel.  State
+    is promoted to the accumulator dtype (int -> int32) once up front so
+    repeated sweeps never narrow intermediate values; all backends (xla
+    reference, chip-level halo exchange) share this ladder.
+    """
+    from . import runtime
+
+    sweeps = weights.shape[0]
+    g = grid.astype(runtime.acc_dtype(grid.dtype))
+    for t in range(sweeps):
+        interior = jacobi2d(
+            g, weights[t].astype(g.dtype), bh=bh, bw=bw,
+            interpret=interpret, dimension_semantics=dimension_semantics,
+        )
+        g = g.at[1:-1, 1:-1].set(interior)
+    return g[1:-1, 1:-1]
 
 
 def mttkrp(

@@ -15,9 +15,16 @@ of the mapper need:
     builder        the IR builder in core/recurrence.py
     operands       (recurrence, rng) -> sample operands matching its
                    extents (tests / benches / smoke all draw from here)
-    supports_systolic
-                   whether the chip-level systolic/allgather shard_map
-                   schedules accept this recurrence's operand contract
+    systolic_lowering
+                   chip-level neighbour-stream schedule hook,
+                   ``(plan, mesh) -> Callable(*operands)`` — the
+                   ``lower_plan(..., backend="systolic")`` dispatch target
+                   (``kernels/systolic.py``); None = not supported
+    allgather_lowering
+                   the GSPMD all-gather/broadcast baseline hook for the
+                   same backend surface (``backend="allgather"``)
+    supports_systolic (property)
+                   True iff a ``systolic_lowering`` hook is registered
     parity_dtypes  dtypes the backend-parity suite sweeps
     atol           float comparison tolerance for parity (ints are exact)
     smoke_args     reduced builder sizes for smoke runs
@@ -41,6 +48,7 @@ from repro.core import recurrence as ir
 from repro.core.partition import MXU_LANES
 
 from . import ref
+from . import systolic as chip
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids import cycles
     from repro.core.mapper import ExecutionPlan
@@ -72,11 +80,17 @@ class KernelSpec:
     xla: Callable[..., Any]
     builder: Callable[..., "UniformRecurrence"]
     operands: Callable[..., tuple]
-    supports_systolic: bool = False
+    systolic_lowering: Callable[..., Callable] | None = None
+    allgather_lowering: Callable[..., Callable] | None = None
     parity_dtypes: tuple[str, ...] = ("float32", "int8", "int16")
     atol: float = 1e-3
     smoke_args: tuple[int, ...] = ()
     bench_cases: tuple[tuple[str, tuple[int, ...]], ...] = ()
+
+    @property
+    def supports_systolic(self) -> bool:
+        """Whether a chip-level neighbour-stream schedule is registered."""
+        return self.systolic_lowering is not None
 
 
 _REGISTRY: dict[str, KernelSpec] = {}
@@ -152,7 +166,8 @@ register(KernelSpec(
     xla=ref.matmul,
     builder=ir.matmul,
     operands=_mm_operands,
-    supports_systolic=True,
+    systolic_lowering=chip.cannon_mm,
+    allgather_lowering=chip.allgather_mm,
     smoke_args=(256, 256, 256),
     bench_cases=(
         ("float32", (8192, 8192, 8192)),
@@ -263,6 +278,8 @@ register(KernelSpec(
     xla=ref.bmm,
     builder=ir.batched_matmul,
     operands=_bmm_operands,
+    systolic_lowering=chip.cannon_bmm,
+    allgather_lowering=chip.allgather_bmm,
     smoke_args=(4, 128, 128, 64),
     bench_cases=(
         ("float32", (64, 4096, 4096, 4096)),
@@ -292,17 +309,53 @@ def _jacobi_operands(rec: "UniformRecurrence", rng) -> tuple:
 register(KernelSpec(
     name="jacobi2d",
     arity=2,
-    grid_loops=("i", "j", "s"),
+    # the dedicated stencil kernel (kernels/jacobi2d.py) contracts all 5
+    # star planes in one visit: the reduction loop s never reaches the grid
+    grid_loops=("i", "j"),
     block_kwargs=_jacobi_blocks,
     pallas=_ops("jacobi2d"),
     xla=ref.jacobi2d,
     builder=ir.jacobi2d,
     operands=_jacobi_operands,
+    systolic_lowering=chip.halo_jacobi2d,
+    allgather_lowering=chip.allgather_jacobi2d,
     smoke_args=(126, 126),
     bench_cases=(
         ("float32", (10238, 10238)),
         ("int8", (10238, 10238)),
         ("int16", (10238, 10238)),
+    ),
+))
+
+
+def _jacobi_ms_operands(rec: "UniformRecurrence", rng) -> tuple:
+    h, w, t = rec.extent("i"), rec.extent("j"), rec.extent("t")
+    d = rec.dtype
+    return (
+        _draw(rng, (h + 2, w + 2), d),
+        _draw(rng, (t, len(ir.JACOBI2D_OFFSETS)), d),
+    )
+
+
+register(KernelSpec(
+    name="jacobi2d_ms",
+    arity=2,
+    # the sweep loop t is a host-level loop around the stencil kernel (its
+    # flow dependence forbids both space mapping and grid parallelism);
+    # the per-sweep weights W[t, s] carry the sweep count in-operand
+    grid_loops=("i", "j"),
+    block_kwargs=_jacobi_blocks,
+    pallas=_ops("jacobi2d_ms"),
+    xla=ref.jacobi2d_ms,
+    builder=ir.jacobi2d_multisweep,
+    operands=_jacobi_ms_operands,
+    systolic_lowering=chip.halo_jacobi2d,
+    allgather_lowering=chip.allgather_jacobi2d,
+    smoke_args=(62, 62, 3),
+    bench_cases=(
+        ("float32", (4094, 4094, 8)),
+        ("int8", (4094, 4094, 8)),
+        ("int16", (4094, 4094, 8)),
     ),
 ))
 

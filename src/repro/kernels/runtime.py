@@ -24,6 +24,12 @@ Codegen's pallas backend, ops-level callers and the benchmarks all route
 through this module, which makes the mapper's ExecutionPlan the executable
 contract rather than a planning artifact.  An unregistered recurrence
 raises ``registry.UnregisteredRecurrenceError`` from every entry point.
+
+The dtype ladders here (``acc_dtype``/``out_dtype``) are shared by the
+chip-level shard_map schedules too (``kernels/systolic.py``): Pallas
+kernels, the XLA references and the Cannon/halo-exchange lowerings all
+widen identically, which is what keeps integer backend parity bit-exact
+across every ``lower_plan`` backend.
 """
 
 from __future__ import annotations

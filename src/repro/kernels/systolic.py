@@ -1,0 +1,321 @@
+"""Chip-level systolic schedules (the AIE-DMA neighbour streams at pod
+scale), dispatched per-recurrence through ``KernelSpec.systolic_lowering``.
+
+Each lowering here is a hook with the signature
+
+    lowering(plan: ExecutionPlan, mesh) -> Callable(*operands)
+
+registered on the recurrence's ``KernelSpec`` (``registry.py``) and
+invoked by ``core/codegen.lower_plan(..., backend="systolic")`` — codegen
+no longer hardcodes an mm-only schedule.  Three neighbour-stream
+schedules and their GSPMD all-gather baselines (``allgather_lowering``,
+the "unconstrained compiler" reference for the §Perf hillclimb):
+
+  cannon_mm       Cannon's algorithm on the square space mesh: A/B blocks
+                  pre-skewed with static ppermutes, then rotated west/north
+                  each step while partial sums accumulate in place.  Never
+                  materializes a gathered operand — edge-bandwidth optimal,
+                  the direct analogue of the paper's AIE DMA edges.
+  cannon_bmm      the same ring vmapped over the batch axis: the batch is
+                  unsharded (every chip holds its (i, k)/(k, j) slice of
+                  all batches) and ``jax.vmap`` lifts the 2-D Cannon body
+                  over the leading axis — ppermute has a batching rule, so
+                  one rotation moves all batches' blocks at once.
+  halo_jacobi2d   stencil halo exchange: the grid interior is sharded over
+                  both space axes; each sweep, every shard ppermutes its
+                  edge rows south/north and edge columns east/west to the
+                  neighbour shards, chips on the array boundary substitute
+                  the fixed (Dirichlet) boundary ring, and the 5-point
+                  star is applied locally.  Multi-sweep (jacobi2d_ms)
+                  iterates the exchange on the *updated* interior — the
+                  recurrence's flow dependence on the sweep loop, executed
+                  as neighbour traffic of exactly one edge row/column per
+                  sweep per shard.
+
+Operand contracts match the specs' (see ``registry.py``): mm (a[m,k],
+b[k,n]), bmm (a[b,m,k], b[b,k,n]), jacobi2d (grid[h+2,w+2], weights[5]),
+jacobi2d_ms (grid[h+2,w+2], weights[T,5]).  Shard divisibility (and, for
+Cannon, a square space mesh) is checked eagerly with actionable errors.
+The accumulator/output dtype ladder is shared with the Pallas runtime
+(``runtime.acc_dtype``/``runtime.out_dtype``), which keeps integer parity
+with the XLA reference bit-exact.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map as _shard_map
+
+from . import runtime
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids import cycles
+    from repro.core.mapper import ExecutionPlan
+
+
+def _space_axes(plan: "ExecutionPlan") -> tuple[str, str]:
+    """The two mesh axes the plan's space loops fold onto (named by the
+    plan's target; the concrete mesh passed to the hook must use the same
+    axis names)."""
+    axes = plan.target.mesh_axes
+    return axes[0], axes[1] if len(axes) > 1 else axes[0]
+
+
+def _require_divisible(what: str, extent: int, width: int, axis: str):
+    if extent % width:
+        raise ValueError(
+            f"{what}: extent {extent} does not divide over the {width}-wide "
+            f"mesh axis {axis!r} — pad the operand or pick a mesh whose "
+            "axis widths divide the space extents")
+
+
+# ---------------------------------------------------------------------------
+# Cannon rings: mm and the batch-vmapped bmm
+# ---------------------------------------------------------------------------
+
+def _cannon_ring(plan: "ExecutionPlan", mesh, batched: bool) -> Callable:
+    """Shared Cannon schedule; ``batched`` lifts the body over a leading
+    unsharded batch axis with ``jax.vmap``."""
+    ax0, ax1 = _space_axes(plan)
+    n0, n1 = mesh.shape[ax0], mesh.shape[ax1]
+    if n0 != n1:
+        raise ValueError(
+            f"cannon schedule needs a square space array, got "
+            f"{ax0}={n0} x {ax1}={n1}")
+    steps = n0
+
+    def local(a_blk, b_blk):
+        n = steps
+        # pre-skew with STATIC perms over the linearized (ax0, ax1) pair:
+        # A(i, k) -> A(i, (k+i) mod n) ; B(k, j) -> B((k+j) mod n, j)
+        skew_a = [(r * n + ((c + r) % n), r * n + c)
+                  for r in range(n) for c in range(n)]
+        skew_b = [(((r + c) % n) * n + c, r * n + c)
+                  for r in range(n) for c in range(n)]
+        a_blk = jax.lax.ppermute(a_blk, (ax0, ax1), skew_a)
+        b_blk = jax.lax.ppermute(b_blk, (ax0, ax1), skew_b)
+
+        acc_t = runtime.acc_dtype(a_blk.dtype)
+        out_t = runtime.out_dtype(a_blk.dtype)
+
+        def dot2d(a, b):
+            if jnp.issubdtype(a.dtype, jnp.integer):
+                a, b = a.astype(jnp.int32), b.astype(jnp.int32)
+            return jnp.dot(a, b, preferred_element_type=acc_t)
+
+        contract = jax.vmap(dot2d) if batched else dot2d
+
+        def body(step, carry):
+            a, b, acc = carry
+            acc = acc + contract(a, b)
+            a = jax.lax.ppermute(
+                a, ax1, [((c + 1) % steps, c) for c in range(steps)]
+            )
+            b = jax.lax.ppermute(
+                b, ax0, [((r + 1) % steps, r) for r in range(steps)]
+            )
+            return a, b, acc
+
+        m, k = a_blk.shape[-2:]
+        nn = b_blk.shape[-1]
+        lead = a_blk.shape[:-2]
+        acc = jnp.zeros(lead + (m, nn), acc_t)
+        a_blk, b_blk, acc = jax.lax.fori_loop(
+            0, steps, body, (a_blk, b_blk, acc)
+        )
+        return acc.astype(out_t)
+
+    spec = P(None, ax0, ax1) if batched else P(ax0, ax1)
+    fn = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(spec, spec),
+        out_specs=spec,
+        check=False,
+    )
+
+    def run(a, b):
+        _require_divisible("cannon A rows", a.shape[-2], n0, ax0)
+        _require_divisible("cannon A cols", a.shape[-1], n1, ax1)
+        _require_divisible("cannon B rows", b.shape[-2], n0, ax0)
+        _require_divisible("cannon B cols", b.shape[-1], n1, ax1)
+        return fn(a, b)
+
+    return run
+
+
+def cannon_mm(plan: "ExecutionPlan", mesh) -> Callable:
+    """Cannon-style systolic matmul over the plan's two space axes.
+
+    A is sharded (i->ax0, k->ax1); B is sharded (k->ax0, j->ax1); C comes
+    out sharded (i->ax0, j->ax1).  Each of the ``steps`` iterations
+    multiplies the local blocks then rotates A west / B north via ppermute
+    — the direct chip-level analogue of the paper's neighbour DMA streams,
+    and it never materializes a gathered operand (edge-bandwidth optimal).
+    """
+    return _cannon_ring(plan, mesh, batched=False)
+
+
+def cannon_bmm(plan: "ExecutionPlan", mesh) -> Callable:
+    """Batched Cannon: the mm ring vmapped over the (unsharded) batch axis
+    — one ppermute rotation carries every batch's block at once."""
+    return _cannon_ring(plan, mesh, batched=True)
+
+
+# ---------------------------------------------------------------------------
+# Jacobi2D halo exchange (single- and multi-sweep)
+# ---------------------------------------------------------------------------
+
+def halo_jacobi2d(plan: "ExecutionPlan", mesh) -> Callable:
+    """Halo-exchange stencil schedule over the plan's two space axes.
+
+    The (h, w) interior is sharded (i->ax0, j->ax1); the four global
+    boundary strips of the padded grid ride along sharded on the matching
+    single axis (replicated on the other).  Per sweep, each shard sends
+    its edge row/column one hop along the mesh — its south edge to the
+    northern halo of the shard below, etc. — and shards on the array
+    boundary substitute the fixed Dirichlet strip.  The 5-point star then
+    needs no corner halos, so four one-hop ppermutes per sweep are the
+    whole communication: the recurrence's read deps within a sweep and,
+    for jacobi2d_ms, the flow dep between sweeps.
+    """
+    ax0, ax1 = _space_axes(plan)
+    n0, n1 = mesh.shape[ax0], mesh.shape[ax1]
+
+    def local(x, wts, top, bot, lft, rgt):
+        acc_t = runtime.acc_dtype(x.dtype)
+        x = x.astype(acc_t)
+        top, bot = top.astype(acc_t), bot.astype(acc_t)
+        lft, rgt = lft.astype(acc_t), rgt.astype(acc_t)
+        row = jax.lax.axis_index(ax0)
+        col = jax.lax.axis_index(ax1)
+        south_perm = [(r, r + 1) for r in range(n0 - 1)]  # edge rows move S
+        north_perm = [(r + 1, r) for r in range(n0 - 1)]  # edge rows move N
+        east_perm = [(c, c + 1) for c in range(n1 - 1)]   # edge cols move E
+        west_perm = [(c + 1, c) for c in range(n1 - 1)]   # edge cols move W
+
+        for t in range(wts.shape[0]):
+            w = wts[t].astype(acc_t)
+            # neighbour edges: receive the adjacent shard's facing edge;
+            # chips with no neighbour get zeros and substitute the fixed
+            # global boundary strip instead (Dirichlet ring).
+            halo_n = jax.lax.ppermute(x[-1:, :], ax0, south_perm)
+            halo_s = jax.lax.ppermute(x[:1, :], ax0, north_perm)
+            halo_w = jax.lax.ppermute(x[:, -1:], ax1, east_perm)
+            halo_e = jax.lax.ppermute(x[:, :1], ax1, west_perm)
+            halo_n = jnp.where(row == 0, top[None, :], halo_n)
+            halo_s = jnp.where(row == n0 - 1, bot[None, :], halo_s)
+            halo_w = jnp.where(col == 0, lft[:, None], halo_w)
+            halo_e = jnp.where(col == n1 - 1, rgt[:, None], halo_e)
+            # shifted planes per JACOBI2D_OFFSETS order:
+            # centre, north, south, west, east
+            north = jnp.concatenate([halo_n, x[:-1, :]], axis=0)
+            south = jnp.concatenate([x[1:, :], halo_s], axis=0)
+            west = jnp.concatenate([halo_w, x[:, :-1]], axis=1)
+            east = jnp.concatenate([x[:, 1:], halo_e], axis=1)
+            x = (w[0] * x + w[1] * north + w[2] * south
+                 + w[3] * west + w[4] * east)
+        return x
+
+    fn = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(ax0, ax1), P(None, None), P(ax1), P(ax1), P(ax0),
+                  P(ax0)),
+        out_specs=P(ax0, ax1),
+        check=False,
+    )
+
+    def run(grid, weights):
+        h, w = grid.shape[0] - 2, grid.shape[1] - 2
+        if h <= 0 or w <= 0:
+            raise ValueError(
+                f"jacobi2d needs a grid of at least 3x3 (got {grid.shape})")
+        _require_divisible("jacobi2d interior rows", h, n0, ax0)
+        _require_divisible("jacobi2d interior cols", w, n1, ax1)
+        wts = weights if weights.ndim == 2 else weights[None, :]
+        out = fn(grid[1:-1, 1:-1], wts, grid[0, 1:-1], grid[-1, 1:-1],
+                 grid[1:-1, 0], grid[1:-1, -1])
+        return out.astype(runtime.out_dtype(grid.dtype))
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# GSPMD all-gather baselines (the "unconstrained compiler" references)
+# ---------------------------------------------------------------------------
+
+def allgather_mm(plan: "ExecutionPlan", mesh) -> Callable:
+    """GSPMD-style baseline: all-gather the k-shards then one local dot.
+    Used as the 'unconstrained compiler' reference in §Perf."""
+    return _allgather_dot(plan, mesh, batched=False)
+
+
+def allgather_bmm(plan: "ExecutionPlan", mesh) -> Callable:
+    """Batched all-gather baseline (batch axis unsharded)."""
+    return _allgather_dot(plan, mesh, batched=True)
+
+
+def _allgather_dot(plan: "ExecutionPlan", mesh, batched: bool) -> Callable:
+    ax0, ax1 = _space_axes(plan)
+    lead = 1 if batched else 0
+
+    def local(a_blk, b_blk):
+        b_full = jax.lax.all_gather(b_blk, ax0, axis=lead, tiled=True)
+        a_full = jax.lax.all_gather(a_blk, ax1, axis=lead + 1, tiled=True)
+        if jnp.issubdtype(a_full.dtype, jnp.integer):
+            a_full = a_full.astype(jnp.int32)
+            b_full = b_full.astype(jnp.int32)
+        return jnp.matmul(
+            a_full, b_full,
+            preferred_element_type=runtime.acc_dtype(a_blk.dtype),
+        ).astype(runtime.out_dtype(a_blk.dtype))
+
+    spec = P(None, ax0, ax1) if batched else P(ax0, ax1)
+    return _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(spec, spec),
+        out_specs=spec,
+        check=False,
+    )
+
+
+def allgather_jacobi2d(plan: "ExecutionPlan", mesh) -> Callable:
+    """Broadcast baseline for the stencil: every chip receives the full
+    grid (the broadcast-fabric strawman the paper's neighbour streams
+    replace), runs all sweeps locally, and keeps only its own block."""
+    from . import ref
+
+    ax0, ax1 = _space_axes(plan)
+    n0, n1 = mesh.shape[ax0], mesh.shape[ax1]
+
+    def local(grid, wts):
+        # the registered reference oracle IS the local program — every chip
+        # computes all sweeps on the broadcast grid, then keeps its block
+        full = ref.jacobi2d_ms(grid, wts)
+        bh, bw = full.shape[0] // n0, full.shape[1] // n1
+        row = jax.lax.axis_index(ax0)
+        col = jax.lax.axis_index(ax1)
+        return jax.lax.dynamic_slice(full, (row * bh, col * bw), (bh, bw))
+
+    fn = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(None, None), P(None, None)),
+        out_specs=P(ax0, ax1),
+        check=False,
+    )
+
+    def run(grid, weights):
+        h, w = grid.shape[0] - 2, grid.shape[1] - 2
+        _require_divisible("jacobi2d interior rows", h, n0, ax0)
+        _require_divisible("jacobi2d interior cols", w, n1, ax1)
+        wts = weights if weights.ndim == 2 else weights[None, :]
+        return fn(grid, wts).astype(runtime.out_dtype(grid.dtype))
+
+    return run

@@ -12,6 +12,7 @@ from repro.core import (
     conv2d,
     fir,
     jacobi2d,
+    jacobi2d_multisweep,
     lower_plan,
     map_recurrence,
     matmul,
@@ -99,6 +100,7 @@ def test_codegen_conv_fir():
 _NEW_RECURRENCES = [
     (batched_matmul, (4, 64, 64, 32)),
     (jacobi2d, (62, 62)),
+    (jacobi2d_multisweep, (62, 62, 3)),
     (mttkrp, (64, 48, 16, 8)),
 ]
 
@@ -127,6 +129,18 @@ def test_new_recurrences_plan_cache_hits(builder, args):
     assert ci.misses == misses
     assert ci.hits >= 1
     assert p1 == p2
+
+
+@pytest.mark.parametrize("target", [Target(), AIE_TARGET],
+                         ids=["tpu_pod", "aie"])
+def test_flow_sweep_loop_stays_temporal_in_ranked_plans(target):
+    """Every plan the mapper ranks for the multi-sweep stencil keeps the
+    flow-dependent sweep loop t off the space axes (it must lower to the
+    halo exchange between sweeps, never to a space fold)."""
+    for plan in map_recurrence(jacobi2d_multisweep(62, 62, 3), target,
+                               top_k=10):
+        assert "t" not in plan.schedule.space_loops, plan.describe()
+        assert "t" in plan.schedule.time_loops
 
 
 def test_predicted_utilization_high_for_mm():

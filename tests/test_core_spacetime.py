@@ -6,6 +6,7 @@ from repro.core import (
     conv2d,
     enumerate_schedules,
     fir,
+    jacobi2d_multisweep,
     matmul,
 )
 from repro.core.spacetime import candidate_space_loops, parallel_time_loops
@@ -72,6 +73,27 @@ def test_fir_parallel_time_loops():
     )
     # t (reduction) has no flow dependence -> threading candidate
     assert "t" in parallel_time_loops(rec, sched)
+
+
+def test_flow_dependent_sweep_loop_never_space():
+    """jacobi2d_ms carries a flow dependence on the sweep loop t (sweep t
+    consumes sweep t-1's interior); t must stay temporal in every legal
+    schedule — a flow-carried space axis would ship the whole intermediate
+    plane across one array edge per step (PR 4 legality refinement)."""
+    rec = jacobi2d_multisweep(32, 32, 4)
+    deps = {(d.array, d.kind): d.distance for d in rec.dependences()}
+    assert deps[("O", "flow")] == (("t", 1),)
+    assert "t" not in candidate_space_loops(rec)
+    scheds = enumerate_schedules(rec)
+    assert scheds
+    for s in scheds:
+        assert "t" not in s.space_loops, s.describe()
+        assert "t" in s.time_loops
+    # the natural stencil mapping (i, j space / t, s time) must survive
+    assert any(s.space_loops == ("i", "j") for s in scheds)
+    # and the flow-carried sweep loop is never a threading candidate either
+    sched = next(s for s in scheds if s.space_loops == ("i", "j"))
+    assert "t" not in parallel_time_loops(rec, sched)
 
 
 def test_validate_rejects_bad_recurrence():

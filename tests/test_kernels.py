@@ -41,9 +41,20 @@ PARITY_CASES = [
 
 def test_parity_covers_all_registered_recurrences():
     assert {n for n, _ in PARITY_CASES} == set(registry.registered_names())
-    # acceptance floor: paper set + the three beyond-paper workloads
+    # acceptance floor: paper set + the beyond-paper workloads
     assert {"mm", "conv2d", "fir", "fft2d_stage",
-            "bmm", "jacobi2d", "mttkrp"} <= set(registry.registered_names())
+            "bmm", "jacobi2d", "jacobi2d_ms",
+            "mttkrp"} <= set(registry.registered_names())
+
+
+def test_systolic_hooks_cover_bmm_and_jacobi():
+    """mm, bmm and both jacobi2d stencils register chip-level lowerings —
+    no supports_systolic=False fallback for these specs (PR 4 tentpole)."""
+    for name in ("mm", "bmm", "jacobi2d", "jacobi2d_ms"):
+        spec = registry.get(name)
+        assert spec.supports_systolic, name
+        assert spec.systolic_lowering is not None, name
+        assert spec.allgather_lowering is not None, name
 
 
 @pytest.mark.parametrize("name,dtype", PARITY_CASES)
@@ -208,6 +219,62 @@ def test_jacobi2d_odd_shapes(hw):
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(ref.jacobi2d(grid, w)), atol=1e-3,
         rtol=1e-3)
+
+
+def _numpy_jacobi_sweeps(grid: np.ndarray, weights: np.ndarray) -> np.ndarray:
+    """Pure-numpy multi-sweep oracle, independent of kernels/ref.py: T
+    weighted 5-point sweeps with the boundary ring held fixed."""
+    from repro.core.recurrence import JACOBI2D_OFFSETS
+
+    acc = np.int32 if np.issubdtype(grid.dtype, np.integer) else np.float32
+    g = grid.astype(acc)
+    oh, ow = g.shape[0] - 2, g.shape[1] - 2
+    for t in range(weights.shape[0]):
+        new = np.zeros((oh, ow), acc)
+        for s, (di, dj) in enumerate(JACOBI2D_OFFSETS):
+            new += g[di: di + oh, dj: dj + ow] * weights[t, s].astype(acc)
+        g[1:-1, 1:-1] = new
+    return g[1:-1, 1:-1]
+
+
+@pytest.mark.parametrize("dtype", ["float32", "int16"])
+def test_jacobi2d_ms_matches_numpy_sweep_loop(dtype):
+    """Multi-sweep jacobi2d (flow dependence on the sweep loop) through
+    the full plan pipeline vs a pure-numpy sweep loop."""
+    from repro.core import jacobi2d_multisweep
+
+    rng = np.random.default_rng(7)
+    h, w, sweeps = 30, 26, 4
+    if dtype.startswith("int"):
+        grid = rng.integers(-6, 6, (h + 2, w + 2)).astype(dtype)
+        wts = rng.integers(-3, 3, (sweeps, 5)).astype(dtype)
+    else:
+        grid = rng.standard_normal((h + 2, w + 2)).astype(np.float32)
+        wts = (rng.standard_normal((sweeps, 5)) * 0.2).astype(np.float32)
+    expect = _numpy_jacobi_sweeps(grid.copy(), wts)
+
+    plan = best_plan(jacobi2d_multisweep(h, w, sweeps, dtype), CHIP)
+    out = lower_plan(plan, backend="pallas", interpret=True)(
+        jnp.asarray(grid), jnp.asarray(wts))
+    exact = dtype.startswith("int")
+    np.testing.assert_allclose(
+        np.asarray(out, np.float64), expect.astype(np.float64),
+        atol=0.0 if exact else 1e-4, rtol=0.0 if exact else 1e-4)
+    # the registered XLA reference agrees with the same numpy loop
+    np.testing.assert_allclose(
+        np.asarray(ref.jacobi2d_ms(jnp.asarray(grid), jnp.asarray(wts)),
+                   np.float64),
+        expect.astype(np.float64),
+        atol=0.0 if exact else 1e-4, rtol=0.0 if exact else 1e-4)
+
+
+def test_jacobi2d_ms_odd_shapes():
+    grid = jnp.asarray(_mk((33, 37), "float32"))
+    wts = jnp.asarray((np.full((3, 5), 0.19)).astype(np.float32))
+    out = ops.jacobi2d_ms(grid, wts, bh=16, bw=16)
+    np.testing.assert_allclose(
+        np.asarray(out), _numpy_jacobi_sweeps(np.asarray(grid), np.asarray(wts)),
+        atol=1e-4, rtol=1e-4)
 
 
 @pytest.mark.parametrize("shape", [(40, 24, 10, 6), (33, 17, 8, 8)])

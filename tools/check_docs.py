@@ -1,0 +1,131 @@
+#!/usr/bin/env python
+"""Docs gate: dead-link and registry-coverage checks (CI docs job).
+
+Two checks, so the docs cannot silently rot as the code grows:
+
+1. **Relative links** in README.md and docs/*.md must resolve: the target
+   file must exist, and when a ``#fragment`` names a heading anchor the
+   target file must contain a matching heading (GitHub slug rules).
+2. **Registry coverage**: every registered KernelSpec name must appear in
+   docs/architecture.md (the canonical spec table).  Spec names come from
+   importing ``repro.kernels.registry`` when the environment has the
+   dependencies, falling back to parsing the registration source — the
+   docs job runs dependency-free.
+
+    python tools/check_docs.py          # exits non-zero on any failure
+"""
+
+from __future__ import annotations
+
+import functools
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+ARCHITECTURE = ROOT / "docs" / "architecture.md"
+
+# [text](target) — excluding images handled the same way is fine too
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_FENCE = re.compile(r"^```.*?^```", re.MULTILINE | re.DOTALL)
+_SPEC_NAME = re.compile(r"^\s*name=\"([A-Za-z0-9_]+)\",\s*$", re.MULTILINE)
+
+
+@functools.lru_cache(maxsize=None)
+def prose_of(path: Path) -> str:
+    """File text with fenced code blocks stripped — code comments are not
+    headings and code-sample links are not checkable targets."""
+    return _FENCE.sub("", path.read_text(encoding="utf-8"))
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's markdown heading -> anchor slug."""
+    heading = re.sub(r"`([^`]*)`", r"\1", heading)      # drop code spans
+    heading = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)  # inline links
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return slug.replace(" ", "-")
+
+
+@functools.lru_cache(maxsize=None)
+def anchors_of(path: Path) -> frozenset[str]:
+    return frozenset(
+        github_slug(h) for h in _HEADING.findall(prose_of(path)))
+
+
+def check_links() -> list[str]:
+    errors: list[str] = []
+    for doc in DOC_FILES:
+        if not doc.exists():
+            errors.append(f"{doc.relative_to(ROOT)}: file missing")
+            continue
+        for target in _LINK.findall(prose_of(doc)):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, …
+                continue
+            if target.startswith("#"):
+                path, frag = doc, target[1:]
+            else:
+                rel, _, frag = target.partition("#")
+                path = (doc.parent / rel).resolve()
+            if not path.is_relative_to(ROOT):
+                # escapes the repo: a GitHub-web path (e.g. the CI badge's
+                # ../../actions/...), not a checkable file link
+                continue
+            if not path.exists():
+                errors.append(
+                    f"{doc.relative_to(ROOT)}: dead link -> {target}")
+                continue
+            if frag and path.suffix == ".md":
+                if frag not in anchors_of(path):
+                    errors.append(
+                        f"{doc.relative_to(ROOT)}: dead anchor -> {target}")
+    return errors
+
+
+def registered_names() -> list[str]:
+    try:
+        sys.path.insert(0, str(ROOT / "src"))
+        from repro.kernels import registry  # type: ignore
+
+        return list(registry.registered_names())
+    except Exception:
+        # dependency-free fallback: the declarative register(...) blocks in
+        # the registry source carry one name="..." line per spec
+        src = (ROOT / "src/repro/kernels/registry.py").read_text(
+            encoding="utf-8")
+        names = _SPEC_NAME.findall(src)
+        if not names:
+            raise SystemExit(
+                "check_docs: could not determine registered spec names "
+                "(import failed and no name=\"...\" lines found)")
+        return sorted(set(names))
+
+
+def check_registry_coverage(names: list[str]) -> list[str]:
+    if not ARCHITECTURE.exists():
+        return ["docs/architecture.md missing (registry coverage check)"]
+    text = ARCHITECTURE.read_text(encoding="utf-8")
+    return [
+        f"docs/architecture.md: registered spec {name!r} is not documented"
+        for name in names
+        if f"`{name}`" not in text
+    ]
+
+
+def main() -> int:
+    names = registered_names()
+    errors = check_links() + check_registry_coverage(names)
+    for e in errors:
+        print(f"FAIL {e}")
+    n_links = sum(
+        len(_LINK.findall(prose_of(d))) for d in DOC_FILES if d.exists())
+    print(f"check_docs: {len(DOC_FILES)} files, {n_links} links, "
+          f"{len(names)} registered specs -> "
+          f"{'FAILED' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
