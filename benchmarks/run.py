@@ -3,16 +3,105 @@
 Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
 
     PYTHONPATH=src python -m benchmarks.run [--only recurrences,...]
+
+``--ci`` runs the bench-regression gate's measurement pass instead: one
+plan-driven smoke execution per registered spec (timing + plan-cache
+counters) written as JSON.  CI compares the fresh file against the
+committed ``benchmarks/BENCH_PR5.json`` baseline with
+``tools/compare_bench.py`` (ratios are machine-normalized, so only real
+>2x per-spec regressions fail the gate — see that tool's docstring).
+
+    PYTHONPATH=src python benchmarks/run.py --ci --out BENCH_NEW.json
 """
 
 import argparse
+import json
 import sys
+import time
+
+
+def ci_bench(out_path: str) -> dict:
+    """Per-spec smoke timings + plan-cache hit counts for the CI gate.
+
+    For every registered KernelSpec: build the smoke-size recurrence on
+    its first parity dtype, plan it, execute through ``execute_plan``
+    (compile excluded), and record
+
+      * ``us_per_call``        — mean of 3 timed calls (interpret mode on
+                                 CPU: a *relative* smoke number, compared
+                                 against the baseline only after machine
+                                 normalization);
+      * ``plan_cache_misses``  — cache misses this spec's planning cost
+                                 (deterministic: a growth means the spec
+                                 started re-planning, a real regression);
+      * ``replan_hits``        — extra hits when re-planning the same
+                                 recurrence (must stay >= 1: the LRU cache
+                                 contract).
+    """
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core import Target, best_plan
+    from repro.core.mapper import plan_cache_clear, plan_cache_info
+    from repro.kernels import execute_plan, registry
+
+    target = Target(name="single_chip", mesh_shape=(1, 1))
+    plan_cache_clear()
+    rng = np.random.default_rng(0)
+    specs_out: dict = {}
+    for spec in registry.specs():
+        dtype = spec.parity_dtypes[0]
+        misses_before = plan_cache_info().misses
+        rec = spec.builder(*spec.smoke_args, dtype)
+        plan = best_plan(rec, target)
+        operands = spec.operands(rec, rng)
+        execute_plan(plan, *operands)  # compile outside the timed loop
+        reps = 3
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = execute_plan(plan, *operands)
+            for leaf in out if isinstance(out, tuple) else (out,):
+                jnp.asarray(leaf).block_until_ready()
+        us = (time.perf_counter() - t0) / reps * 1e6
+        hits_before = plan_cache_info().hits
+        best_plan(spec.builder(*spec.smoke_args, dtype), target)
+        specs_out[spec.name] = {
+            "dtype": dtype,
+            "us_per_call": round(us, 1),
+            "plan_cache_misses": plan_cache_info().misses - misses_before,
+            "replan_hits": plan_cache_info().hits - hits_before,
+        }
+        print(f"ci-bench {spec.name:13s} {dtype:8s} {us:10.1f} us  "
+              f"misses={specs_out[spec.name]['plan_cache_misses']} "
+              f"replan_hits={specs_out[spec.name]['replan_hits']}")
+    payload = {
+        "schema": 1,
+        "note": ("per-spec smoke timings (interpret mode) + plan-cache "
+                 "counters; compare with tools/compare_bench.py, never "
+                 "raw across machines"),
+        "specs": specs_out,
+    }
+    with open(out_path, "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"ci-bench: wrote {out_path} ({len(specs_out)} specs)")
+    return payload
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all")
+    ap.add_argument("--ci", action="store_true",
+                    help="bench-regression measurement pass: per-spec "
+                         "smoke timings + plan-cache counters as JSON")
+    ap.add_argument("--out", default="BENCH_NEW.json",
+                    help="output path for --ci (pass "
+                         "benchmarks/BENCH_PR5.json explicitly when "
+                         "refreshing the committed baseline)")
     args = ap.parse_args()
+    if args.ci:
+        ci_bench(args.out)
+        return
     only = args.only.split(",") if args.only != "all" else None
 
     from benchmarks import (

@@ -19,6 +19,7 @@ from .recurrence import (
     fft2d_stage,
     fir,
     jacobi2d,
+    jacobi2d_9pt,
     jacobi2d_multisweep,
     matmul,
     mttkrp,
@@ -38,7 +39,8 @@ from .codegen import lower_plan
 __all__ = [
     "Access", "Dependence", "UniformRecurrence",
     "matmul", "conv2d", "fir", "fft2d_stage",
-    "batched_matmul", "jacobi2d", "jacobi2d_multisweep", "mttkrp",
+    "batched_matmul", "jacobi2d", "jacobi2d_9pt", "jacobi2d_multisweep",
+    "mttkrp",
     "SystolicSchedule", "enumerate_schedules",
     "Partition", "partition_schedule",
     "MappedGraph", "build_mapped_graph", "assign_plios", "congestion",

@@ -9,9 +9,11 @@ Four backends:
   'systolic'— chip-level shard_map schedule: the plan's space loops become
               mesh axes; read/flow dependences lower to lax.ppermute
               neighbour streams (the AIE-DMA edge analogue): Cannon rings
-              for mm/bmm, halo exchange for the jacobi2d stencils.  This
-              is the paper's systolic design at pod scale and the baseline
-              for the §Perf collective hillclimb.
+              for mm/bmm, a complex two-plane ring for fft2d_stage, width-k
+              halo exchange for the jacobi2d stencils, 1-D shifted-window
+              chains for conv2d/fir and a staged 2-D ring for mttkrp — the
+              full registry.  This is the paper's systolic design at pod
+              scale and the baseline for the §Perf collective hillclimb.
 
 There is also 'allgather', the GSPMD broadcast baseline the systolic
 schedules are measured against (benchmarks/bench_mapping.py).
@@ -81,9 +83,10 @@ def lower_plan(
     if backend in ("systolic", "allgather"):
         assert mesh is not None
         # chip-level schedules are per-recurrence shard_map programs
-        # (repro/kernels/systolic.py); each KernelSpec registers the hook
-        # for the operand contracts it satisfies (e.g. fft2d_stage is
-        # mm-shaped but streams (x_re, x_im), so it registers none).
+        # (repro/kernels/systolic.py); every built-in KernelSpec registers
+        # both hooks as of PR 5 (Cannon rings, the complex two-plane ring,
+        # width-k halo exchange, 1-D chains, the mttkrp ring) — the error
+        # below remains for third-party specs that opt out.
         spec = _spec(plan)
         hook = (spec.systolic_lowering if backend == "systolic"
                 else spec.allgather_lowering)

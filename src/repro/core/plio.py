@@ -110,6 +110,16 @@ def build_mapped_graph(
         d1 = dep.dist(space[1]) if len(space) > 1 else 0
         return (d0, d1)
 
+    # Arrays already injected by a zero-space-distance ("local") read stream:
+    # their window/halo read deps along space loops (stencil star points,
+    # e.g. jacobi2d's G at i±1 or the 9-point star's i±2) are *reuse of
+    # resident data* — intra-array neighbour hops, not new boundary streams.
+    # They contribute neighbour edges below but no extra PLIO ports.
+    locally_fed = {
+        dep.array for dep, cls in sched.comm
+        if cls == "local" and dep.kind == "read"
+    }
+
     for dep, cls in sched.comm:
         d = dep_dir(dep)
         if cls in ("neighbour", "reduce") and d != (0, 0):
@@ -119,6 +129,8 @@ def build_mapped_graph(
                 dst = (n.row + d[0], n.col + d[1])
                 if 0 <= dst[0] < rows and 0 <= dst[1] < cols:
                     neighbour_edges.append((src, dst, dep.array))
+            if dep.kind == "read" and dep.array in locally_fed:
+                continue  # halo hop of resident data: edges only, no port
             # boundary injection side (for read/flow) or drain side (output)
             if dep.kind in ("read", "flow"):
                 boundary = [

@@ -18,7 +18,15 @@ and three beyond-paper workloads from the domains the paper names
     Jacobi2D O[i,j]   += G[i+di_s, j+dj_s] * w[s] (5-point stencil sweep)
     Jacobi2D-MS  the same stencil iterated over a sweep loop t with a
                  *flow* dependence (sweep t consumes sweep t-1's interior)
+    Jacobi2D-9PT the radius-2 star (9 points) — its distance-2 read deps
+                 exercise the width-k halo legality + exchange machinery
     MTTKRP   M[i,j]   += X[i,k,l] * B[k,j] * C[l,j] (tensor decomposition)
+
+The stencil builders carry their star in the IR itself: one read access
+per star point, with the signed ``(loop, offset)`` index functions the
+halo machinery consumes (``stencil_star``/``halo_radius`` below) — the
+chip-level halo width is derived from the access functions, never
+hand-declared per kernel.
 
 Accesses are affine with unit coefficients (array index = subset of loop
 indices + constant offsets), which is exactly the class the paper handles.
@@ -276,6 +284,64 @@ def batched_matmul(
 #: loop s; (di, dj) into the padded input grid (centre at (1, 1)).
 JACOBI2D_OFFSETS = ((1, 1), (0, 1), (2, 1), (1, 0), (1, 2))
 
+#: 9-point radius-2 star (centre, N1, N2, S1, S2, W1, W2, E1, E2), indexed
+#: by the reduction loop s; (di, dj) into the padded grid (centre (2, 2)).
+JACOBI2D_9PT_OFFSETS = (
+    (2, 2),
+    (1, 2), (0, 2), (3, 2), (4, 2),
+    (2, 1), (2, 0), (2, 3), (2, 4),
+)
+
+
+def _star_accesses(
+    array: str, offsets: tuple[tuple[int, int], ...], pad: int
+) -> tuple[Access, ...]:
+    """One read access per star point, signed offsets relative to the
+    centre — the IR carries the stencil geometry the halo machinery
+    consumes (``stencil_star``/``halo_radius``)."""
+    return tuple(
+        Access(array, (("i", di - pad), ("j", dj - pad)), "read")
+        for di, dj in offsets
+    )
+
+
+def stencil_star(rec: UniformRecurrence) -> tuple[tuple[int, ...], ...] | None:
+    """The recurrence's star: ordered signed per-point offsets, recovered
+    from the access functions.
+
+    A stencil shows up in the IR as one array read at several constant
+    offsets (one access per star point, in reduction-loop order).  Returns
+    the ``(offset per index dim, ...)`` tuple per point for the first such
+    array, or None when no array is read at more than one offset (mm,
+    conv2d's base-point window, ...).
+    """
+    by_array: dict[str, list[Access]] = {}
+    for acc in rec.accesses:
+        if acc.kind == "read":
+            by_array.setdefault(acc.array, []).append(acc)
+    for accs in by_array.values():
+        if len(accs) > 1:
+            return tuple(
+                tuple(off for _, off in acc.index) for acc in accs
+            )
+    return None
+
+
+def halo_radius(rec: UniformRecurrence, loops: Sequence[str]) -> int:
+    """Width of the halo a shard must import per space axis: the largest
+    |offset| any read access applies to one of ``loops``.  This is what
+    makes the chip-level halo exchange *width-k* — radius 1 for the
+    5-point star, 2 for the 9-point radius-2 star — driven entirely by
+    the IR access functions."""
+    radius = 0
+    for acc in rec.accesses:
+        if acc.kind != "read":
+            continue
+        for loop, off in acc.index:
+            if loop in loops:
+                radius = max(radius, abs(off))
+    return radius
+
 
 def jacobi2d(h: int, w: int, dtype: str = "float32") -> UniformRecurrence:
     """O[i,j] += G[i+di_s, j+dj_s] * w[s] — one weighted 5-point Jacobi
@@ -284,16 +350,46 @@ def jacobi2d(h: int, w: int, dtype: str = "float32") -> UniformRecurrence:
     Same structural class as the Versal stencil-advection work: the star
     is flattened into the reduction loop s (like conv2d's (p, q) window),
     and the staging layer builds the shifted-point stack.  ``h``/``w`` are
-    the *output* (interior) extents.
+    the *output* (interior) extents.  The IR carries one G access per star
+    point (signed offsets, reduction order) so the halo machinery derives
+    its width from the access functions (``halo_radius`` = 1 here).
     """
     r = UniformRecurrence(
         name="jacobi2d",
         loops=("i", "j", "s"),
         extents=(h, w, len(JACOBI2D_OFFSETS)),
         accesses=(
-            Access("G", (("i", 0), ("j", 0)), "read"),  # base point; star
-            Access("W", (("s", 0),), "read"),           # offsets live in the
-            Access("O", (("i", 0), ("j", 0)), "accum"),  # staged stack
+            *_star_accesses("G", JACOBI2D_OFFSETS, pad=1),
+            Access("W", (("s", 0),), "read"),
+            Access("O", (("i", 0), ("j", 0)), "accum"),
+        ),
+        reduction_loops=frozenset({"s"}),
+        ops_per_point=2,
+        dtype=dtype,
+    )
+    r.validate()
+    return r
+
+
+def jacobi2d_9pt(h: int, w: int, dtype: str = "float32") -> UniformRecurrence:
+    """O[i,j] += G[i+di_s, j+dj_s] * w[s] — one weighted 9-point *radius-2*
+    star sweep over the interior of an (h+4, w+4) grid.
+
+    The higher-order stencil class (star radius > 1): its distance-2 read
+    dependences on the space loops are legal under the width-k refinement
+    (``spacetime.candidate_space_loops``) and lower to a width-2 halo
+    exchange at chip level — one hop of a 2-wide edge strip, since the
+    whole halo lives in the adjacent shard whenever radius <= shard
+    extent.  ``halo_radius`` recovers the 2 from the access functions.
+    """
+    r = UniformRecurrence(
+        name="jacobi2d_9pt",
+        loops=("i", "j", "s"),
+        extents=(h, w, len(JACOBI2D_9PT_OFFSETS)),
+        accesses=(
+            *_star_accesses("G", JACOBI2D_9PT_OFFSETS, pad=2),
+            Access("W", (("s", 0),), "read"),
+            Access("O", (("i", 0), ("j", 0)), "accum"),
         ),
         reduction_loops=frozenset({"s"}),
         ops_per_point=2,
@@ -329,7 +425,7 @@ def jacobi2d_multisweep(
         loops=("t", "i", "j", "s"),
         extents=(sweeps, h, w, len(JACOBI2D_OFFSETS)),
         accesses=(
-            Access("G", (("i", 0), ("j", 0)), "read"),
+            *_star_accesses("G", JACOBI2D_OFFSETS, pad=1),
             Access("W", (("t", 0), ("s", 0)), "read"),
             Access("O", (("i", 0), ("j", 0)), "accum"),
         ),

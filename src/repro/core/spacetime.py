@@ -62,26 +62,34 @@ class SystolicSchedule:
 
 
 def candidate_space_loops(rec: UniformRecurrence) -> list[str]:
-    """Loops on which all dependence distances are <= 1 in magnitude and
-    that carry no *flow* dependence.
+    """Loops whose dependences admit neighbour-stream lowering on a space
+    axis.
 
-    The distance rule is the paper's "dependence distances no greater than
-    one" space-loop condition.  The flow rule is the chip-level legality
-    refinement for time-iterated recurrences (multi-sweep stencils): a flow
-    dependence along loop ``t`` carried by an array indexed only by the
-    *other* loops (e.g. jacobi2d_ms's ``O[i,j]`` across sweeps) transfers
-    the entire intermediate plane between consecutive ``t`` iterations.
-    Mapped to a space axis that is not a neighbour stream — every step the
-    full state would cross one array edge, which the congestion model
-    rejects for any non-trivial extent — so such loops stay temporal and
-    the dependence lowers to the halo exchange between sweeps instead.
-    (Output/read dependences are unaffected: partial-sum and reuse chains
-    along space loops are exactly the systolic neighbour streams.)
+    Three rules compose here:
+
+    * **distance rule** (paper §III-B1) for *flow*/*output* dependences:
+      |distance| <= 1 — partial sums and true dependences must move at
+      most one hop per step.
+    * **width-k refinement** (PR 5) for *read* dependences: a read dep of
+      constant distance k > 1 (a higher-order stencil's star points, e.g.
+      the radius-2 9-point star) is still space-legal — it lowers to a
+      *width-k halo*: one ppermute of a k-wide edge strip, a single hop as
+      long as k fits inside the adjacent shard (checked at lowering time,
+      ``kernels/systolic.py``).
+    * **flow rule** (PR 4) for time-iterated recurrences (multi-sweep
+      stencils): a flow dependence along loop ``t`` carried by an array
+      indexed only by the *other* loops (e.g. jacobi2d_ms's ``O[i,j]``
+      across sweeps) transfers the entire intermediate plane between
+      consecutive ``t`` iterations.  Mapped to a space axis that is not a
+      neighbour stream — every step the full state would cross one array
+      edge, which the congestion model rejects for any non-trivial extent
+      — so such loops stay temporal and the dependence lowers to the halo
+      exchange between sweeps instead.
     """
     deps = rec.dependences()
     out = []
     for loop in rec.loops:
-        if any(abs(d.dist(loop)) > 1 for d in deps):
+        if any(abs(d.dist(loop)) > 1 for d in deps if d.kind != "read"):
             continue
         if any(d.kind == "flow" and d.dist(loop) != 0 for d in deps):
             continue
@@ -117,8 +125,10 @@ def _legal(
 
     With lexicographic execution of ``time`` loops, a dependence is satisfied
     iff its distance vector restricted to time loops is lexicographically
-    non-negative; dependences carried purely by space loops must be
-    neighbour-distance (|d| <= 1) so they lower to one-hop communication.
+    non-negative; flow/output dependences carried purely by space loops must
+    be neighbour-distance (|d| <= 1) so they lower to one-hop communication.
+    Read dependences are exempt from the space-distance cap (width-k halo
+    refinement — see ``candidate_space_loops``).
     """
     for dep in rec.dependences():
         tvec = [dep.dist(l) for l in time]
@@ -131,7 +141,8 @@ def _legal(
                 break
         if sign < 0:
             return False  # would need to run time backwards
-        if sign == 0 and any(abs(d) > 1 for d in svec):
+        if (sign == 0 and dep.kind != "read"
+                and any(abs(d) > 1 for d in svec)):
             return False  # multi-hop space communication in a single step
     return True
 

@@ -19,7 +19,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.recurrence import JACOBI2D_OFFSETS
+from repro.core.recurrence import JACOBI2D_9PT_OFFSETS, JACOBI2D_OFFSETS
 
 from . import bmm as _bmm
 from . import conv2d as _conv
@@ -91,6 +91,46 @@ def bmm(
     return out[:, :m, :n]
 
 
+def _star2d(
+    grid: jax.Array,
+    weights: jax.Array,
+    offsets: tuple[tuple[int, int], ...],
+    *,
+    bh: int,
+    bw: int,
+    interpret: bool | None,
+    dimension_semantics: tuple[str, ...] | None,
+) -> jax.Array:
+    """Shared star staging: one weighted sweep over the grid interior.
+
+    The star is staged as a shifted-point stack (the DMA-module analogue,
+    same as conv/fir) and contracted on the dedicated stencil kernel
+    (``kernels/jacobi2d.py`` — plane-count generic).  ``offsets`` are
+    padded-grid (di, dj) per star point; the pad width is derived from
+    them (1 for the 5-point star, 2 for the radius-2 9-point star).
+    """
+    from . import ref
+
+    pad = ref._star_pad(offsets)
+    h, w = grid.shape
+    oh, ow = h - 2 * pad, w - 2 * pad
+    if oh <= 0 or ow <= 0:
+        raise ValueError(
+            f"star stencil needs a grid of at least "
+            f"{2 * pad + 1}x{2 * pad + 1} (got {grid.shape}): "
+            "no interior to update")
+    stack = jnp.stack(
+        [grid[di : di + oh, dj : dj + ow] for di, dj in offsets]
+    )  # (S, oh, ow)
+    bh_, bw_ = min(bh, oh) or 1, min(bw, ow) or 1
+    stack = _pad_to(stack, (1, bh_, bw_))
+    out = _jacobi.jacobi2d_stacked(
+        stack, weights, bh=bh_, bw=bw_, interpret=interpret,
+        dimension_semantics=dimension_semantics,
+    )
+    return out[:oh, :ow]
+
+
 def jacobi2d(
     grid: jax.Array,
     weights: jax.Array,
@@ -104,26 +144,32 @@ def jacobi2d(
 
     ``grid``: (H, W) field; ``weights``: (5,) star weights ordered as
     ``recurrence.JACOBI2D_OFFSETS`` (centre, north, south, west, east).
-    Returns the (H-2, W-2) interior update.  The star is staged as a
-    shifted-point stack (the DMA-module analogue, same as conv/fir) and
-    contracted on the dedicated stencil kernel (``kernels/jacobi2d.py``).
+    Returns the (H-2, W-2) interior update.
     """
-    h, w = grid.shape
-    oh, ow = h - 2, w - 2
-    if oh <= 0 or ow <= 0:
-        raise ValueError(
-            f"jacobi2d needs a grid of at least 3x3 (got {grid.shape}): "
-            "the 5-point star has no interior to update")
-    stack = jnp.stack(
-        [grid[di : di + oh, dj : dj + ow] for di, dj in JACOBI2D_OFFSETS]
-    )  # (5, oh, ow)
-    bh_, bw_ = min(bh, oh) or 1, min(bw, ow) or 1
-    stack = _pad_to(stack, (1, bh_, bw_))
-    out = _jacobi.jacobi2d_stacked(
-        stack, weights, bh=bh_, bw=bw_, interpret=interpret,
-        dimension_semantics=dimension_semantics,
-    )
-    return out[:oh, :ow]
+    return _star2d(grid, weights, JACOBI2D_OFFSETS, bh=bh, bw=bw,
+                   interpret=interpret,
+                   dimension_semantics=dimension_semantics)
+
+
+def jacobi2d_9pt(
+    grid: jax.Array,
+    weights: jax.Array,
+    *,
+    bh: int = 128,
+    bw: int = 128,
+    interpret: bool | None = None,
+    dimension_semantics: tuple[str, ...] | None = None,
+) -> jax.Array:
+    """One weighted 9-point *radius-2* star sweep over the grid interior.
+
+    ``grid``: (H, W) field; ``weights``: (9,) star weights ordered as
+    ``recurrence.JACOBI2D_9PT_OFFSETS`` (centre, N1, N2, S1, S2, W1, W2,
+    E1, E2).  Returns the (H-4, W-4) interior update — the width-2 halo
+    workload at chip level (``kernels/systolic.py``).
+    """
+    return _star2d(grid, weights, JACOBI2D_9PT_OFFSETS, bh=bh, bw=bw,
+                   interpret=interpret,
+                   dimension_semantics=dimension_semantics)
 
 
 def jacobi2d_ms(

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.recurrence import JACOBI2D_OFFSETS
+from repro.core.recurrence import JACOBI2D_9PT_OFFSETS, JACOBI2D_OFFSETS
 
 
 def matmul(a, b):
@@ -32,28 +32,56 @@ def bmm(a, b):
     ).astype(a.dtype)
 
 
-def jacobi2d(grid, weights):
-    """Weighted 5-point Jacobi sweep over the interior (VALID)."""
+def _star_pad(offsets) -> int:
+    """Pad width of a padded-offsets star: the largest offset component is
+    2*radius (some point reaches +radius past the centre on its widest
+    axis), whichever axis that is — 1 for the 5-point star, 2 for the
+    radius-2 9-point star, and correct for axis-asymmetric stars too."""
+    return max(max(di, dj) for di, dj in offsets) // 2
+
+
+def star2d(grid, weights, offsets):
+    """One weighted star sweep over the interior (VALID): the generic
+    stencil oracle — ``offsets`` are padded-grid (di, dj) per star point;
+    the pad width is derived from them (``_star_pad``)."""
+    pad = _star_pad(offsets)
     h, w = grid.shape
-    oh, ow = h - 2, w - 2
+    oh, ow = h - 2 * pad, w - 2 * pad
     acc = jnp.int32 if jnp.issubdtype(grid.dtype, jnp.integer) else jnp.float32
     out = jnp.zeros((oh, ow), acc)
-    for s, (di, dj) in enumerate(JACOBI2D_OFFSETS):
+    for s, (di, dj) in enumerate(offsets):
         out = out + grid[di : di + oh, dj : dj + ow].astype(acc) * weights[
             s
         ].astype(acc)
     return out
 
 
-def jacobi2d_ms(grid, weights):
-    """Multi-sweep Jacobi: weights is (T, 5); sweep t consumes sweep t-1's
+def star2d_ms(grid, weights, offsets):
+    """Multi-sweep star: weights is (T, S); sweep t consumes sweep t-1's
     interior re-embedded in the fixed boundary ring (flow dependence on t).
     State promotes to the accumulator dtype up front (shared ladder)."""
+    pad = _star_pad(offsets)
     acc = jnp.int32 if jnp.issubdtype(grid.dtype, jnp.integer) else jnp.float32
     g = grid.astype(acc)
+    sl = slice(pad, -pad)
     for t in range(weights.shape[0]):
-        g = g.at[1:-1, 1:-1].set(jacobi2d(g, weights[t].astype(acc)))
-    return g[1:-1, 1:-1]
+        g = g.at[sl, sl].set(star2d(g, weights[t].astype(acc), offsets))
+    return g[sl, sl]
+
+
+def jacobi2d(grid, weights):
+    """Weighted 5-point Jacobi sweep over the interior (VALID)."""
+    return star2d(grid, weights, JACOBI2D_OFFSETS)
+
+
+def jacobi2d_9pt(grid, weights):
+    """Weighted 9-point radius-2 star sweep over the interior (VALID)."""
+    return star2d(grid, weights, JACOBI2D_9PT_OFFSETS)
+
+
+def jacobi2d_ms(grid, weights):
+    """Multi-sweep Jacobi on the 5-point star (see ``star2d_ms``)."""
+    return star2d_ms(grid, weights, JACOBI2D_OFFSETS)
 
 
 def mttkrp(x, b, c):

@@ -196,6 +196,8 @@ register(KernelSpec(
     parity_dtypes=("float32",),
     atol=1.0,
     operands=_fft_operands,
+    systolic_lowering=chip.cannon_fft2d,
+    allgather_lowering=chip.allgather_fft2d,
     smoke_args=(64, 64),
     bench_cases=(("cfloat", (8192, 8192)), ("cint16", (8192, 8192))),
 ))
@@ -224,7 +226,11 @@ register(KernelSpec(
     xla=ref.conv2d,
     builder=ir.conv2d,
     operands=_conv_operands,
-    smoke_args=(61, 61, 4, 4),
+    systolic_lowering=chip.chain_conv2d,
+    allgather_lowering=chip.allgather_conv2d,
+    # output rows divide the linearized chain of the parity meshes (2x2
+    # and 2x4); width stays odd to keep the staging padding exercised
+    smoke_args=(64, 61, 4, 4),
     bench_cases=(
         ("float32", (10240, 10240, 4, 4)),
         ("int8", (10240, 10240, 8, 8)),
@@ -253,7 +259,10 @@ register(KernelSpec(
     xla=ref.fir,
     builder=ir.fir,
     operands=_fir_operands,
-    smoke_args=(1010, 15),
+    systolic_lowering=chip.chain_fir,
+    allgather_lowering=chip.allgather_fir,
+    # output count divides the linearized chain of the parity meshes
+    smoke_args=(1024, 15),
     bench_cases=(
         ("float32", (1048576, 15)),
         ("int8", (1048576, 15)),
@@ -317,8 +326,8 @@ register(KernelSpec(
     xla=ref.jacobi2d,
     builder=ir.jacobi2d,
     operands=_jacobi_operands,
-    systolic_lowering=chip.halo_jacobi2d,
-    allgather_lowering=chip.allgather_jacobi2d,
+    systolic_lowering=chip.halo_stencil,
+    allgather_lowering=chip.allgather_stencil,
     smoke_args=(126, 126),
     bench_cases=(
         ("float32", (10238, 10238)),
@@ -349,13 +358,44 @@ register(KernelSpec(
     xla=ref.jacobi2d_ms,
     builder=ir.jacobi2d_multisweep,
     operands=_jacobi_ms_operands,
-    systolic_lowering=chip.halo_jacobi2d,
-    allgather_lowering=chip.allgather_jacobi2d,
+    systolic_lowering=chip.halo_stencil,
+    allgather_lowering=chip.allgather_stencil,
     smoke_args=(62, 62, 3),
     bench_cases=(
         ("float32", (4094, 4094, 8)),
         ("int8", (4094, 4094, 8)),
         ("int16", (4094, 4094, 8)),
+    ),
+))
+
+
+def _jacobi9_operands(rec: "UniformRecurrence", rng) -> tuple:
+    h, w = rec.extent("i"), rec.extent("j")
+    d = rec.dtype
+    return (
+        _draw(rng, (h + 4, w + 4), d),
+        _draw(rng, (len(ir.JACOBI2D_9PT_OFFSETS),), d),
+    )
+
+
+register(KernelSpec(
+    name="jacobi2d_9pt",
+    arity=2,
+    # radius-2 star: same single-visit stencil kernel (plane-count
+    # generic), 9 shifted planes staged by ops.jacobi2d_9pt
+    grid_loops=("i", "j"),
+    block_kwargs=_jacobi_blocks,
+    pallas=_ops("jacobi2d_9pt"),
+    xla=ref.jacobi2d_9pt,
+    builder=ir.jacobi2d_9pt,
+    operands=_jacobi9_operands,
+    systolic_lowering=chip.halo_stencil,
+    allgather_lowering=chip.allgather_stencil,
+    smoke_args=(64, 64),
+    bench_cases=(
+        ("float32", (10236, 10236)),
+        ("int8", (10236, 10236)),
+        ("int16", (10236, 10236)),
     ),
 ))
 
@@ -389,6 +429,8 @@ register(KernelSpec(
     xla=ref.mttkrp,
     builder=ir.mttkrp,
     operands=_mttkrp_operands,
+    systolic_lowering=chip.ring_mttkrp,
+    allgather_lowering=chip.allgather_mttkrp,
     smoke_args=(128, 64, 16, 8),
     bench_cases=(
         ("float32", (4096, 400, 256, 256)),

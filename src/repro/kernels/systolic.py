@@ -7,38 +7,56 @@ Each lowering here is a hook with the signature
 
 registered on the recurrence's ``KernelSpec`` (``registry.py``) and
 invoked by ``core/codegen.lower_plan(..., backend="systolic")`` — codegen
-no longer hardcodes an mm-only schedule.  Three neighbour-stream
-schedules and their GSPMD all-gather baselines (``allgather_lowering``,
-the "unconstrained compiler" reference for the §Perf hillclimb):
+no longer hardcodes an mm-only schedule.  Every registered spec maps to
+one of four neighbour-stream schedule families (plus the GSPMD
+all-gather/broadcast baselines, ``allgather_lowering`` — the
+"unconstrained compiler" references for the §Perf hillclimb):
 
-  cannon_mm       Cannon's algorithm on the square space mesh: A/B blocks
+  cannon_mm / cannon_bmm
+                  Cannon's algorithm on the square space mesh: A/B blocks
                   pre-skewed with static ppermutes, then rotated west/north
-                  each step while partial sums accumulate in place.  Never
-                  materializes a gathered operand — edge-bandwidth optimal,
-                  the direct analogue of the paper's AIE DMA edges.
-  cannon_bmm      the same ring vmapped over the batch axis: the batch is
-                  unsharded (every chip holds its (i, k)/(k, j) slice of
-                  all batches) and ``jax.vmap`` lifts the 2-D Cannon body
-                  over the leading axis — ppermute has a batching rule, so
-                  one rotation moves all batches' blocks at once.
-  halo_jacobi2d   stencil halo exchange: the grid interior is sharded over
-                  both space axes; each sweep, every shard ppermutes its
-                  edge rows south/north and edge columns east/west to the
-                  neighbour shards, chips on the array boundary substitute
-                  the fixed (Dirichlet) boundary ring, and the 5-point
+                  each step while partial sums accumulate in place; bmm is
+                  the same ring vmapped over an unsharded batch axis.
+                  Never materializes a gathered operand — edge-bandwidth
+                  optimal, the direct analogue of the paper's AIE DMA edges.
+  cannon_fft2d    the complex two-plane Cannon variant: real/imag planes
+                  of each operand are co-rotated around the same ring, so
+                  the cross products of the complex MAC stay local to the
+                  chip at every step.  Both DFT stages of the four-step
+                  2-D FFT (Z = F_R @ X @ F_C) ride the ring.
+  halo_stencil    width-k halo exchange for star stencils: the grid
+                  interior is sharded over both space axes; per sweep every
+                  shard ppermutes a *k-wide* edge strip to each neighbour
+                  (k = the stencil radius, derived from the recurrence's
+                  access-function offsets — 1 for the 5-point star, 2 for
+                  the radius-2 9-point star), chips on the array boundary
+                  substitute the fixed (Dirichlet) boundary strip, and the
                   star is applied locally.  Multi-sweep (jacobi2d_ms)
                   iterates the exchange on the *updated* interior — the
                   recurrence's flow dependence on the sweep loop, executed
-                  as neighbour traffic of exactly one edge row/column per
-                  sweep per shard.
+                  as k edge rows/columns of neighbour traffic per sweep.
+  chain_conv2d / chain_fir
+                  1-D neighbour chains with a shifted-window halo: the
+                  output domain is sharded over the linearized mesh; each
+                  shard receives the *left edge of width kernel-1* of its
+                  right neighbour via one one-hop ppermute (the window tail
+                  it needs to close its own outputs), and the last shard in
+                  the chain substitutes the global input tail strip instead
+                  (the Dirichlet analogue of the stencil boundary ring).
+  ring_mttkrp     2-D ring over (i, j): Cannon over the l contraction with
+                  the two factor matrices staged around the ring — C[l,j]
+                  co-rotates with X's l-blocks (north), X rotates west, and
+                  B[k,j] stays staged along the ring's rows (j-sharded,
+                  row-replicated); the three-operand contraction runs per
+                  step with ``acc_dtype`` accumulation.
 
-Operand contracts match the specs' (see ``registry.py``): mm (a[m,k],
-b[k,n]), bmm (a[b,m,k], b[b,k,n]), jacobi2d (grid[h+2,w+2], weights[5]),
-jacobi2d_ms (grid[h+2,w+2], weights[T,5]).  Shard divisibility (and, for
-Cannon, a square space mesh) is checked eagerly with actionable errors.
-The accumulator/output dtype ladder is shared with the Pallas runtime
-(``runtime.acc_dtype``/``runtime.out_dtype``), which keeps integer parity
-with the XLA reference bit-exact.
+Operand contracts match the specs' (see ``registry.py``).  Shard
+divisibility (and, for the Cannon rings, a square space mesh) is checked
+eagerly with actionable errors; halo/window widths must fit inside the
+adjacent shard so every exchange stays one hop.  The accumulator/output
+dtype ladder is shared with the Pallas runtime (``runtime.acc_dtype``/
+``runtime.out_dtype``), which keeps integer parity with the XLA reference
+bit-exact.
 """
 
 from __future__ import annotations
@@ -50,6 +68,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map as _shard_map
+from repro.core.recurrence import stencil_star
 
 from . import runtime
 
@@ -73,29 +92,43 @@ def _require_divisible(what: str, extent: int, width: int, axis: str):
             "axis widths divide the space extents")
 
 
-# ---------------------------------------------------------------------------
-# Cannon rings: mm and the batch-vmapped bmm
-# ---------------------------------------------------------------------------
-
-def _cannon_ring(plan: "ExecutionPlan", mesh, batched: bool) -> Callable:
-    """Shared Cannon schedule; ``batched`` lifts the body over a leading
-    unsharded batch axis with ``jax.vmap``."""
+def _require_square(plan: "ExecutionPlan", mesh, what: str) -> tuple:
     ax0, ax1 = _space_axes(plan)
     n0, n1 = mesh.shape[ax0], mesh.shape[ax1]
     if n0 != n1:
         raise ValueError(
-            f"cannon schedule needs a square space array, got "
-            f"{ax0}={n0} x {ax1}={n1}")
-    steps = n0
+            f"{what} needs a square space array, got {ax0}={n0} x "
+            f"{ax1}={n1}")
+    return ax0, ax1, n0
+
+
+# ---------------------------------------------------------------------------
+# Cannon rings: mm, the batch-vmapped bmm, and the complex two-plane fft2d
+# ---------------------------------------------------------------------------
+
+def _skew_perms(n: int) -> tuple[list, list]:
+    """Cannon pre-skew as STATIC perms over the linearized (ax0, ax1) pair:
+    A(i, k) -> A(i, (k+i) mod n) ; B(k, j) -> B((k+j) mod n, j)."""
+    skew_a = [(r * n + ((c + r) % n), r * n + c)
+              for r in range(n) for c in range(n)]
+    skew_b = [(((r + c) % n) * n + c, r * n + c)
+              for r in range(n) for c in range(n)]
+    return skew_a, skew_b
+
+
+def _rot_perm(n: int) -> list:
+    """One ring rotation: every member receives from its +1 neighbour
+    (A moves one hop west along ax1 / B one hop north along ax0)."""
+    return [((i + 1) % n, i) for i in range(n)]
+
+
+def _cannon_ring(plan: "ExecutionPlan", mesh, batched: bool) -> Callable:
+    """Shared Cannon schedule; ``batched`` lifts the body over a leading
+    unsharded batch axis with ``jax.vmap``."""
+    ax0, ax1, steps = _require_square(plan, mesh, "cannon schedule")
 
     def local(a_blk, b_blk):
-        n = steps
-        # pre-skew with STATIC perms over the linearized (ax0, ax1) pair:
-        # A(i, k) -> A(i, (k+i) mod n) ; B(k, j) -> B((k+j) mod n, j)
-        skew_a = [(r * n + ((c + r) % n), r * n + c)
-                  for r in range(n) for c in range(n)]
-        skew_b = [(((r + c) % n) * n + c, r * n + c)
-                  for r in range(n) for c in range(n)]
+        skew_a, skew_b = _skew_perms(steps)
         a_blk = jax.lax.ppermute(a_blk, (ax0, ax1), skew_a)
         b_blk = jax.lax.ppermute(b_blk, (ax0, ax1), skew_b)
 
@@ -112,12 +145,8 @@ def _cannon_ring(plan: "ExecutionPlan", mesh, batched: bool) -> Callable:
         def body(step, carry):
             a, b, acc = carry
             acc = acc + contract(a, b)
-            a = jax.lax.ppermute(
-                a, ax1, [((c + 1) % steps, c) for c in range(steps)]
-            )
-            b = jax.lax.ppermute(
-                b, ax0, [((r + 1) % steps, r) for r in range(steps)]
-            )
+            a = jax.lax.ppermute(a, ax1, _rot_perm(steps))
+            b = jax.lax.ppermute(b, ax0, _rot_perm(steps))
             return a, b, acc
 
         m, k = a_blk.shape[-2:]
@@ -139,10 +168,10 @@ def _cannon_ring(plan: "ExecutionPlan", mesh, batched: bool) -> Callable:
     )
 
     def run(a, b):
-        _require_divisible("cannon A rows", a.shape[-2], n0, ax0)
-        _require_divisible("cannon A cols", a.shape[-1], n1, ax1)
-        _require_divisible("cannon B rows", b.shape[-2], n0, ax0)
-        _require_divisible("cannon B cols", b.shape[-1], n1, ax1)
+        _require_divisible("cannon A rows", a.shape[-2], steps, ax0)
+        _require_divisible("cannon A cols", a.shape[-1], steps, ax1)
+        _require_divisible("cannon B rows", b.shape[-2], steps, ax0)
+        _require_divisible("cannon B cols", b.shape[-1], steps, ax1)
         return fn(a, b)
 
     return run
@@ -166,25 +195,119 @@ def cannon_bmm(plan: "ExecutionPlan", mesh) -> Callable:
     return _cannon_ring(plan, mesh, batched=True)
 
 
+def cannon_fft2d(plan: "ExecutionPlan", mesh) -> Callable:
+    """Complex two-plane Cannon for the 2-D FFT's DFT stages.
+
+    The MXU has no complex datapath, so complex operands ride as (re, im)
+    real-plane pairs; the schedule *co-rotates* both planes of A west and
+    both planes of B north around the same ring, so the four cross
+    products of the complex MAC (rr, ii, ri, ir) are always between
+    blocks resident on the same chip — twiddle/DFT-factor application
+    stays local at every step.  Both stages of the four-step decomposition
+    (Y = F_R @ X, then Z = Y @ F_C) run on the same ring; the DFT matrices
+    are staged host-side exactly like the Pallas path (``kernels/fft2d``).
+    """
+    ax0, ax1, steps = _require_square(plan, mesh, "complex cannon (fft2d)")
+
+    def local(ar, ai, br, bi):
+        skew_a, skew_b = _skew_perms(steps)
+        ar = jax.lax.ppermute(ar, (ax0, ax1), skew_a)
+        ai = jax.lax.ppermute(ai, (ax0, ax1), skew_a)
+        br = jax.lax.ppermute(br, (ax0, ax1), skew_b)
+        bi = jax.lax.ppermute(bi, (ax0, ax1), skew_b)
+
+        def dot(a, b):
+            return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+        def body(step, carry):
+            ar, ai, br, bi, accr, acci = carry
+            # complex MAC on co-resident blocks (4-mult form)
+            accr = accr + dot(ar, br) - dot(ai, bi)
+            acci = acci + dot(ar, bi) + dot(ai, br)
+            rot = _rot_perm(steps)
+            ar = jax.lax.ppermute(ar, ax1, rot)
+            ai = jax.lax.ppermute(ai, ax1, rot)
+            br = jax.lax.ppermute(br, ax0, rot)
+            bi = jax.lax.ppermute(bi, ax0, rot)
+            return ar, ai, br, bi, accr, acci
+
+        m = ar.shape[0]
+        nn = br.shape[1]
+        accr = jnp.zeros((m, nn), jnp.float32)
+        acci = jnp.zeros((m, nn), jnp.float32)
+        out = jax.lax.fori_loop(
+            0, steps, body, (ar, ai, br, bi, accr, acci)
+        )
+        return out[4], out[5]
+
+    spec = P(ax0, ax1)
+    cfn = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(spec, spec, spec, spec),
+        out_specs=(spec, spec),
+        check=False,
+    )
+
+    def run(x_re, x_im):
+        from .fft2d import dft_matrix
+
+        r, c = x_re.shape
+        _require_divisible("fft2d rows", r, steps, ax0)
+        _require_divisible("fft2d cols", c, steps, ax1)
+        fr_re, fr_im = (jnp.asarray(m) for m in dft_matrix(r))
+        fc_re, fc_im = (jnp.asarray(m) for m in dft_matrix(c))
+        y_re, y_im = cfn(fr_re, fr_im, x_re, x_im)    # stage 1: F_R @ X
+        return cfn(y_re, y_im, fc_re, fc_im)          # stage 2: Y @ F_C
+
+    return run
+
+
 # ---------------------------------------------------------------------------
-# Jacobi2D halo exchange (single- and multi-sweep)
+# Width-k halo exchange for star stencils (jacobi2d, jacobi2d_ms, 9-point)
 # ---------------------------------------------------------------------------
 
-def halo_jacobi2d(plan: "ExecutionPlan", mesh) -> Callable:
-    """Halo-exchange stencil schedule over the plan's two space axes.
+def _star_of(plan: "ExecutionPlan") -> tuple[tuple[tuple[int, int], ...], int]:
+    """(signed star offsets, radius) from the recurrence's access
+    functions — the IR, not the kernel, declares the halo width."""
+    star = stencil_star(plan.recurrence)
+    if star is None:
+        raise ValueError(
+            f"halo_stencil: recurrence {plan.recurrence.name!r} carries no "
+            "multi-point read access — not a stencil")
+    radius = 0
+    for off in star:
+        di, dj = off[0], off[1] if len(off) > 1 else 0
+        if di and dj:
+            raise ValueError(
+                "halo_stencil handles star stencils only (no diagonal "
+                f"points / corner halos), got offset {off}")
+        radius = max(radius, abs(di), abs(dj))
+    return tuple((o[0], o[1] if len(o) > 1 else 0) for o in star), radius
+
+
+def halo_stencil(plan: "ExecutionPlan", mesh) -> Callable:
+    """Width-k halo-exchange schedule over the plan's two space axes.
 
     The (h, w) interior is sharded (i->ax0, j->ax1); the four global
-    boundary strips of the padded grid ride along sharded on the matching
-    single axis (replicated on the other).  Per sweep, each shard sends
-    its edge row/column one hop along the mesh — its south edge to the
-    northern halo of the shard below, etc. — and shards on the array
-    boundary substitute the fixed Dirichlet strip.  The 5-point star then
-    needs no corner halos, so four one-hop ppermutes per sweep are the
-    whole communication: the recurrence's read deps within a sweep and,
-    for jacobi2d_ms, the flow dep between sweeps.
+    boundary strips of the padded grid — now ``radius`` wide — ride along
+    sharded on the matching single axis (replicated on the other).  Per
+    sweep, each shard sends its ``radius``-wide edge strip one hop along
+    the mesh — its bottom ``radius`` rows to the northern halo of the
+    shard below, etc. — and shards on the array boundary substitute the
+    fixed Dirichlet strip.  A *star* stencil (no diagonal points) needs no
+    corner halos, so four one-hop strip ppermutes per sweep are the whole
+    communication, whatever the radius: the recurrence's distance-k read
+    deps within a sweep and, for jacobi2d_ms, the flow dep between sweeps.
+    The radius and the per-point shifts come from the recurrence's access
+    functions (``recurrence.stencil_star``/``halo_radius``) — radius 1
+    reproduces the PR 4 jacobi2d schedule exactly, radius 2 serves the
+    9-point star.
     """
+    star, radius = _star_of(plan)
     ax0, ax1 = _space_axes(plan)
     n0, n1 = mesh.shape[ax0], mesh.shape[ax1]
+    r = radius
 
     def local(x, wts, top, bot, lft, rgt):
         acc_t = runtime.acc_dtype(x.dtype)
@@ -193,54 +316,263 @@ def halo_jacobi2d(plan: "ExecutionPlan", mesh) -> Callable:
         lft, rgt = lft.astype(acc_t), rgt.astype(acc_t)
         row = jax.lax.axis_index(ax0)
         col = jax.lax.axis_index(ax1)
-        south_perm = [(r, r + 1) for r in range(n0 - 1)]  # edge rows move S
-        north_perm = [(r + 1, r) for r in range(n0 - 1)]  # edge rows move N
-        east_perm = [(c, c + 1) for c in range(n1 - 1)]   # edge cols move E
-        west_perm = [(c + 1, c) for c in range(n1 - 1)]   # edge cols move W
+        south_perm = [(q, q + 1) for q in range(n0 - 1)]  # edge strips S
+        north_perm = [(q + 1, q) for q in range(n0 - 1)]  # edge strips N
+        east_perm = [(q, q + 1) for q in range(n1 - 1)]   # edge strips E
+        west_perm = [(q + 1, q) for q in range(n1 - 1)]   # edge strips W
+        hl, wl = x.shape
 
         for t in range(wts.shape[0]):
-            w = wts[t].astype(acc_t)
-            # neighbour edges: receive the adjacent shard's facing edge;
-            # chips with no neighbour get zeros and substitute the fixed
-            # global boundary strip instead (Dirichlet ring).
-            halo_n = jax.lax.ppermute(x[-1:, :], ax0, south_perm)
-            halo_s = jax.lax.ppermute(x[:1, :], ax0, north_perm)
-            halo_w = jax.lax.ppermute(x[:, -1:], ax1, east_perm)
-            halo_e = jax.lax.ppermute(x[:, :1], ax1, west_perm)
-            halo_n = jnp.where(row == 0, top[None, :], halo_n)
-            halo_s = jnp.where(row == n0 - 1, bot[None, :], halo_s)
-            halo_w = jnp.where(col == 0, lft[:, None], halo_w)
-            halo_e = jnp.where(col == n1 - 1, rgt[:, None], halo_e)
-            # shifted planes per JACOBI2D_OFFSETS order:
-            # centre, north, south, west, east
-            north = jnp.concatenate([halo_n, x[:-1, :]], axis=0)
-            south = jnp.concatenate([x[1:, :], halo_s], axis=0)
-            west = jnp.concatenate([halo_w, x[:, :-1]], axis=1)
-            east = jnp.concatenate([x[:, 1:], halo_e], axis=1)
-            x = (w[0] * x + w[1] * north + w[2] * south
-                 + w[3] * west + w[4] * east)
+            # neighbour strips: receive the adjacent shard's facing r-wide
+            # edge; chips with no neighbour get zeros and substitute the
+            # fixed global boundary strip instead (Dirichlet ring).
+            halo_n = jax.lax.ppermute(x[-r:, :], ax0, south_perm)
+            halo_s = jax.lax.ppermute(x[:r, :], ax0, north_perm)
+            halo_w = jax.lax.ppermute(x[:, -r:], ax1, east_perm)
+            halo_e = jax.lax.ppermute(x[:, :r], ax1, west_perm)
+            halo_n = jnp.where(row == 0, top, halo_n)
+            halo_s = jnp.where(row == n0 - 1, bot, halo_s)
+            halo_w = jnp.where(col == 0, lft, halo_w)
+            halo_e = jnp.where(col == n1 - 1, rgt, halo_e)
+            # extended planes: vertical / horizontal shifts only (star)
+            xv = jnp.concatenate([halo_n, x, halo_s], axis=0)
+            xh = jnp.concatenate([halo_w, x, halo_e], axis=1)
+            new = jnp.zeros_like(x)
+            for s, (di, dj) in enumerate(star):
+                w = wts[t, s].astype(acc_t)
+                if di == 0 and dj == 0:
+                    plane = x
+                elif dj == 0:
+                    plane = xv[r + di : r + di + hl, :]
+                else:
+                    plane = xh[:, r + dj : r + dj + wl]
+                new = new + w * plane
+            x = new
         return x
 
     fn = _shard_map(
         local,
         mesh=mesh,
-        in_specs=(P(ax0, ax1), P(None, None), P(ax1), P(ax1), P(ax0),
-                  P(ax0)),
+        in_specs=(P(ax0, ax1), P(None, None), P(None, ax1), P(None, ax1),
+                  P(ax0, None), P(ax0, None)),
         out_specs=P(ax0, ax1),
         check=False,
     )
 
     def run(grid, weights):
-        h, w = grid.shape[0] - 2, grid.shape[1] - 2
+        h, w = grid.shape[0] - 2 * r, grid.shape[1] - 2 * r
         if h <= 0 or w <= 0:
             raise ValueError(
-                f"jacobi2d needs a grid of at least 3x3 (got {grid.shape})")
-        _require_divisible("jacobi2d interior rows", h, n0, ax0)
-        _require_divisible("jacobi2d interior cols", w, n1, ax1)
+                f"stencil needs a grid of at least "
+                f"{2 * r + 1}x{2 * r + 1} (got {grid.shape})")
+        _require_divisible("stencil interior rows", h, n0, ax0)
+        _require_divisible("stencil interior cols", w, n1, ax1)
+        if r > h // n0 or r > w // n1:
+            raise ValueError(
+                f"halo radius {r} exceeds the {h // n0}x{w // n1} shard — "
+                "a one-hop exchange can only import the adjacent shard; "
+                "use fewer chips or a larger grid")
         wts = weights if weights.ndim == 2 else weights[None, :]
-        out = fn(grid[1:-1, 1:-1], wts, grid[0, 1:-1], grid[-1, 1:-1],
-                 grid[1:-1, 0], grid[1:-1, -1])
+        out = fn(grid[r:-r, r:-r], wts,
+                 grid[:r, r:-r], grid[-r:, r:-r],
+                 grid[r:-r, :r], grid[r:-r, -r:])
         return out.astype(runtime.out_dtype(grid.dtype))
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# 1-D neighbour chains with shifted-window halo: conv2d and fir
+# ---------------------------------------------------------------------------
+
+def _chain(plan: "ExecutionPlan", mesh) -> tuple[tuple[str, ...], int]:
+    """The linearized 1-D device chain over the plan's space axes: both
+    mesh axes fold into one chain (row-major), so a rectangular mesh is
+    fine and every chip joins the chain — no idle axis."""
+    ax0, ax1 = _space_axes(plan)
+    if ax1 == ax0:
+        return (ax0,), mesh.shape[ax0]
+    return (ax0, ax1), mesh.shape[ax0] * mesh.shape[ax1]
+
+
+def _chain_index(axes: tuple[str, ...], mesh):
+    idx = jax.lax.axis_index(axes[0])
+    for ax in axes[1:]:
+        idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+    return idx
+
+
+def _chain_recv_next(val, axes: tuple[str, ...], width: int):
+    """Every chain member receives ``val`` from its right neighbour (one
+    hop); the last member receives zeros (substituted by the caller)."""
+    if width == 1:
+        return jnp.zeros_like(val)
+    return jax.lax.ppermute(
+        val, axes if len(axes) > 1 else axes[0],
+        [(i + 1, i) for i in range(width - 1)])
+
+
+def chain_conv2d(plan: "ExecutionPlan", mesh) -> Callable:
+    """1-D neighbour-chain conv2d with a shifted-window halo.
+
+    The h output rows are sharded over the linearized chain (full image
+    width stays local, so this is genuinely 1-D: one neighbour, one
+    stream).  Each shard needs ``p-1`` rows beyond its slice to close its
+    windows — exactly its right neighbour's *top* ``p-1`` rows, fetched
+    with a single one-hop ppermute of the strip; the last shard in the
+    chain substitutes the global input tail strip instead (the Dirichlet
+    analogue).  Local compute is the shifted-window stack, widened on the
+    shared acc_dtype ladder.
+    """
+    axes, width = _chain(plan, mesh)
+
+    def local(x, tail, filt):
+        p, q = filt.shape
+        hl = x.shape[0]
+        acc_t = runtime.acc_dtype(x.dtype)
+        if p > 1:
+            halo = _chain_recv_next(x[: p - 1, :], axes, width)
+            idx = _chain_index(axes, mesh)
+            halo = jnp.where(idx == width - 1, tail, halo)
+            x = jnp.concatenate([x, halo], axis=0)
+        x = x.astype(acc_t)
+        f = filt.astype(acc_t)
+        ow = x.shape[1] - q + 1
+        out = jnp.zeros((hl, ow), acc_t)
+        for pp in range(p):
+            for qq in range(q):
+                out = out + x[pp : pp + hl, qq : qq + ow] * f[pp, qq]
+        return out
+
+    fn = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axes, None), P(None, None), P(None, None)),
+        out_specs=P(axes, None),
+        check=False,
+    )
+
+    def run(img, filt):
+        p, q = filt.shape
+        h = img.shape[0] - p + 1
+        _require_divisible("conv2d output rows", h, width, "+".join(axes))
+        if p - 1 > h // width:
+            raise ValueError(
+                f"window height {p} exceeds the {h // width}-row shard — "
+                "the width-(p-1) halo must come from the adjacent shard "
+                "(one hop); use fewer chips or larger images")
+        out = fn(img[:h], img[h:], filt)
+        return out.astype(runtime.out_dtype(img.dtype))
+
+    return run
+
+
+def chain_fir(plan: "ExecutionPlan", mesh) -> Callable:
+    """1-D neighbour-chain FIR: the n output samples are sharded over the
+    linearized chain; each shard one-hop-receives the first ``taps-1``
+    samples of its right neighbour (the shifted-window halo) and the last
+    shard substitutes the global input tail."""
+    axes, width = _chain(plan, mesh)
+
+    def local(x, tail, taps):
+        t = taps.shape[0]
+        nl = x.shape[0]
+        acc_t = runtime.acc_dtype(x.dtype)
+        if t > 1:
+            halo = _chain_recv_next(x[: t - 1], axes, width)
+            idx = _chain_index(axes, mesh)
+            halo = jnp.where(idx == width - 1, tail, halo)
+            x = jnp.concatenate([x, halo])
+        x = x.astype(acc_t)
+        h = taps.astype(acc_t)
+        out = jnp.zeros((nl,), acc_t)
+        for i in range(t):
+            out = out + x[i : i + nl] * h[i]
+        return out
+
+    fn = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axes), P(None), P(None)),
+        out_specs=P(axes),
+        check=False,
+    )
+
+    def run(x, taps):
+        t = taps.shape[0]
+        n_out = x.shape[0] - t + 1
+        _require_divisible("fir outputs", n_out, width, "+".join(axes))
+        if t - 1 > n_out // width:
+            raise ValueError(
+                f"tap count {t} exceeds the {n_out // width}-sample shard "
+                "— the width-(t-1) halo must come from the adjacent shard "
+                "(one hop); use fewer chips or longer signals")
+        out = fn(x[:n_out], x[n_out:], taps)
+        return out.astype(runtime.out_dtype(x.dtype))
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# MTTKRP: 2-D ring over (i, j) with the factor matrices staged
+# ---------------------------------------------------------------------------
+
+def ring_mttkrp(plan: "ExecutionPlan", mesh) -> Callable:
+    """2-D ring for M[i,j] += X[i,k,l] B[k,j] C[l,j].
+
+    Cannon over the ``l`` contraction: X is sharded (i->ax0, l->ax1) and
+    rotates west; the factor matrix C (l->ax0, j->ax1) co-rotates north so
+    the matching l-block is always co-resident (same pre-skew as mm); the
+    factor matrix B (k unsharded, j->ax1) is staged along the ring's rows
+    — each column of chips holds its j-slice for the whole schedule.  One
+    three-operand contraction per step, ``acc_dtype`` accumulation, output
+    sharded (i->ax0, j->ax1).  The ``k`` contraction stays chip-local (it
+    is a time loop of the plan).
+    """
+    ax0, ax1, steps = _require_square(plan, mesh, "mttkrp ring")
+
+    def local(x_blk, b_blk, c_blk):
+        skew_a, skew_b = _skew_perms(steps)
+        x_blk = jax.lax.ppermute(x_blk, (ax0, ax1), skew_a)
+        c_blk = jax.lax.ppermute(c_blk, (ax0, ax1), skew_b)
+
+        acc_t = runtime.acc_dtype(x_blk.dtype)
+        out_t = runtime.out_dtype(x_blk.dtype)
+
+        def contract(x, b, c):
+            if jnp.issubdtype(x.dtype, jnp.integer):
+                x, b, c = (v.astype(jnp.int32) for v in (x, b, c))
+            return jnp.einsum(
+                "ikl,kj,lj->ij", x, b, c, preferred_element_type=acc_t)
+
+        def body(step, carry):
+            x, c, acc = carry
+            acc = acc + contract(x, b_blk, c)
+            x = jax.lax.ppermute(x, ax1, _rot_perm(steps))
+            c = jax.lax.ppermute(c, ax0, _rot_perm(steps))
+            return x, c, acc
+
+        acc = jnp.zeros((x_blk.shape[0], c_blk.shape[1]), acc_t)
+        x_blk, c_blk, acc = jax.lax.fori_loop(
+            0, steps, body, (x_blk, c_blk, acc)
+        )
+        return acc.astype(out_t)
+
+    fn = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(ax0, None, ax1), P(None, ax1), P(ax0, ax1)),
+        out_specs=P(ax0, ax1),
+        check=False,
+    )
+
+    def run(x, b, c):
+        _require_divisible("mttkrp X rows (i)", x.shape[0], steps, ax0)
+        _require_divisible("mttkrp X depth (l)", x.shape[2], steps, ax1)
+        _require_divisible("mttkrp C rows (l)", c.shape[0], steps, ax0)
+        _require_divisible("mttkrp B cols (j)", b.shape[1], steps, ax1)
+        _require_divisible("mttkrp C cols (j)", c.shape[1], steps, ax1)
+        return fn(x, b, c)
 
     return run
 
@@ -285,19 +617,23 @@ def _allgather_dot(plan: "ExecutionPlan", mesh, batched: bool) -> Callable:
     )
 
 
-def allgather_jacobi2d(plan: "ExecutionPlan", mesh) -> Callable:
-    """Broadcast baseline for the stencil: every chip receives the full
-    grid (the broadcast-fabric strawman the paper's neighbour streams
-    replace), runs all sweeps locally, and keeps only its own block."""
+def allgather_stencil(plan: "ExecutionPlan", mesh) -> Callable:
+    """Broadcast baseline for the star stencils: every chip receives the
+    full grid (the broadcast-fabric strawman the paper's neighbour streams
+    replace), runs all sweeps locally, and keeps only its own block.  The
+    star (and so the pad width) comes from the recurrence's access
+    functions, same as ``halo_stencil``."""
     from . import ref
 
+    star, radius = _star_of(plan)
+    padded = tuple((di + radius, dj + radius) for di, dj in star)
     ax0, ax1 = _space_axes(plan)
     n0, n1 = mesh.shape[ax0], mesh.shape[ax1]
 
     def local(grid, wts):
-        # the registered reference oracle IS the local program — every chip
+        # the generic star oracle IS the local program — every chip
         # computes all sweeps on the broadcast grid, then keeps its block
-        full = ref.jacobi2d_ms(grid, wts)
+        full = ref.star2d_ms(grid, wts, padded)
         bh, bw = full.shape[0] // n0, full.shape[1] // n1
         row = jax.lax.axis_index(ax0)
         col = jax.lax.axis_index(ax1)
@@ -312,10 +648,133 @@ def allgather_jacobi2d(plan: "ExecutionPlan", mesh) -> Callable:
     )
 
     def run(grid, weights):
-        h, w = grid.shape[0] - 2, grid.shape[1] - 2
-        _require_divisible("jacobi2d interior rows", h, n0, ax0)
-        _require_divisible("jacobi2d interior cols", w, n1, ax1)
+        h, w = grid.shape[0] - 2 * radius, grid.shape[1] - 2 * radius
+        _require_divisible("stencil interior rows", h, n0, ax0)
+        _require_divisible("stencil interior cols", w, n1, ax1)
         wts = weights if weights.ndim == 2 else weights[None, :]
         return fn(grid, wts).astype(runtime.out_dtype(grid.dtype))
+
+    return run
+
+
+# PR 4 name for the 5-point schedules; the machinery is now width-generic.
+allgather_jacobi2d = allgather_stencil
+halo_jacobi2d = halo_stencil
+
+
+def _allgather_chain(plan: "ExecutionPlan", mesh, reference, out_ndim,
+                     out_len) -> Callable:
+    """Shared broadcast baseline for the 1-D chains: every chip receives
+    the full operands, runs the reference oracle, keeps its own slice of
+    the leading output axis."""
+    axes, width = _chain(plan, mesh)
+
+    def local(a, b):
+        full = reference(a, b)
+        bl = full.shape[0] // width
+        idx = _chain_index(axes, mesh)
+        start = (idx * bl,) + (0,) * (out_ndim - 1)
+        return jax.lax.dynamic_slice(full, start, (bl,) + full.shape[1:])
+
+    fn = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P()),
+        out_specs=P(axes, None) if out_ndim == 2 else P(axes),
+        check=False,
+    )
+
+    def run(a, b):
+        _require_divisible("chain outputs", out_len(a, b), width,
+                           "+".join(axes))
+        return fn(a, b)
+
+    return run
+
+
+def allgather_conv2d(plan: "ExecutionPlan", mesh) -> Callable:
+    """Broadcast baseline for the conv2d chain: full image everywhere,
+    local reference conv, keep own row block."""
+    from . import ref
+
+    return _allgather_chain(
+        plan, mesh, ref.conv2d, 2,
+        lambda img, filt: img.shape[0] - filt.shape[0] + 1)
+
+
+def allgather_fir(plan: "ExecutionPlan", mesh) -> Callable:
+    """Broadcast baseline for the FIR chain: full signal everywhere,
+    local reference FIR, keep own sample block."""
+    from . import ref
+
+    return _allgather_chain(
+        plan, mesh, ref.fir, 1,
+        lambda x, taps: x.shape[0] - taps.shape[0] + 1)
+
+
+def allgather_mttkrp(plan: "ExecutionPlan", mesh) -> Callable:
+    """All-gather baseline for mttkrp: gather X's l-shards (ax1) and C's
+    l-shards (ax0), then one local three-operand contraction."""
+    ax0, ax1 = _space_axes(plan)
+
+    def local(x_blk, b_blk, c_blk):
+        x_full = jax.lax.all_gather(x_blk, ax1, axis=2, tiled=True)
+        c_full = jax.lax.all_gather(c_blk, ax0, axis=0, tiled=True)
+        if jnp.issubdtype(x_full.dtype, jnp.integer):
+            x_full, b_blk, c_full = (
+                v.astype(jnp.int32) for v in (x_full, b_blk, c_full))
+        return jnp.einsum(
+            "ikl,kj,lj->ij", x_full, b_blk, c_full,
+            preferred_element_type=runtime.acc_dtype(x_blk.dtype),
+        ).astype(runtime.out_dtype(x_blk.dtype))
+
+    fn = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(ax0, None, ax1), P(None, ax1), P(ax0, ax1)),
+        out_specs=P(ax0, ax1),
+        check=False,
+    )
+
+    def run(x, b, c):
+        n0, n1 = mesh.shape[ax0], mesh.shape[ax1]
+        _require_divisible("mttkrp X rows (i)", x.shape[0], n0, ax0)
+        _require_divisible("mttkrp X depth (l)", x.shape[2], n1, ax1)
+        _require_divisible("mttkrp C rows (l)", c.shape[0], n0, ax0)
+        _require_divisible("mttkrp B cols (j)", b.shape[1], n1, ax1)
+        return fn(x, b, c)
+
+    return run
+
+
+def allgather_fft2d(plan: "ExecutionPlan", mesh) -> Callable:
+    """Broadcast baseline for fft2d: both real planes everywhere, local
+    reference FFT, keep own (row, col) block of each plane."""
+    from . import ref
+
+    ax0, ax1 = _space_axes(plan)
+    n0, n1 = mesh.shape[ax0], mesh.shape[ax1]
+
+    def local(xr, xi):
+        zr, zi = ref.fft2d(xr, xi)
+        bh, bw = zr.shape[0] // n0, zr.shape[1] // n1
+        row = jax.lax.axis_index(ax0)
+        col = jax.lax.axis_index(ax1)
+        sl = lambda z: jax.lax.dynamic_slice(  # noqa: E731
+            z, (row * bh, col * bw), (bh, bw))
+        return sl(zr), sl(zi)
+
+    fn = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(None, None), P(None, None)),
+        out_specs=(P(ax0, ax1), P(ax0, ax1)),
+        check=False,
+    )
+
+    def run(x_re, x_im):
+        _require_divisible("fft2d rows", x_re.shape[0], n0, ax0)
+        _require_divisible("fft2d cols", x_re.shape[1], n1, ax1)
+        return fn(x_re, x_im)
 
     return run

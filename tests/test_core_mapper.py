@@ -12,6 +12,7 @@ from repro.core import (
     conv2d,
     fir,
     jacobi2d,
+    jacobi2d_9pt,
     jacobi2d_multisweep,
     lower_plan,
     map_recurrence,
@@ -101,6 +102,7 @@ _NEW_RECURRENCES = [
     (batched_matmul, (4, 64, 64, 32)),
     (jacobi2d, (62, 62)),
     (jacobi2d_multisweep, (62, 62, 3)),
+    (jacobi2d_9pt, (64, 64)),
     (mttkrp, (64, 48, 16, 8)),
 ]
 

@@ -6,6 +6,7 @@ from repro.core import (
     conv2d,
     enumerate_schedules,
     fir,
+    jacobi2d_9pt,
     jacobi2d_multisweep,
     matmul,
 )
@@ -94,6 +95,60 @@ def test_flow_dependent_sweep_loop_never_space():
     # and the flow-carried sweep loop is never a threading candidate either
     sched = next(s for s in scheds if s.space_loops == ("i", "j"))
     assert "t" not in parallel_time_loops(rec, sched)
+
+
+def test_radius2_star_space_legal_via_width_k_halos():
+    """jacobi2d_9pt carries distance-2 *read* deps on i and j (the
+    radius-2 star points live in the IR access functions).  Under the
+    width-k refinement those loops remain space candidates — the deps
+    lower to a width-2 halo strip, still one hop — while flow/output
+    dependences keep the paper's strict |d| <= 1 rule."""
+    rec = jacobi2d_9pt(32, 32)
+    dists = {abs(d.dist("i")) for d in rec.dependences()} | {
+        abs(d.dist("j")) for d in rec.dependences()}
+    assert 2 in dists  # the radius-2 points really are in the IR
+    cands = candidate_space_loops(rec)
+    assert "i" in cands and "j" in cands
+    scheds = enumerate_schedules(rec)
+    assert any(s.space_loops == ("i", "j") for s in scheds)
+    # the star reads classify as neighbour streams on the space axes
+    sched = next(s for s in scheds if s.space_loops == ("i", "j"))
+    star_comm = {cls for d, cls in sched.comm
+                 if d.array == "G" and d.dist("i") != 0}
+    assert star_comm == {"neighbour"}
+
+
+def test_flow_and_output_deps_keep_strict_distance_rule():
+    """The width-k exemption is read-only: a flow or output dependence of
+    distance 2 still disqualifies the loop as a space axis."""
+    from repro.core.recurrence import Access, UniformRecurrence
+
+    rec = UniformRecurrence(
+        name="strided_accum",
+        loops=("i", "k"),
+        extents=(16, 16),
+        accesses=(
+            Access("A", (("i", 0), ("k", 0)), "read"),
+            # accumulated array indexed at i with no k: output dep (k, 1);
+            # fake a distance-2 output chain via an offset write index
+            Access("O", (("i", 2),), "accum"),
+        ),
+        reduction_loops=frozenset({"k"}),
+    )
+    # the offset on the *write* access does not create a read-style halo:
+    # i carries only |d|<=1 deps here, but a synthetic flow dep of
+    # distance 2 must be rejected by the legality predicate
+    from repro.core.recurrence import Dependence
+    from repro.core.spacetime import _legal
+
+    class Rigged(UniformRecurrence):
+        def dependences(self):
+            return (Dependence("O", "flow", (("i", 2),)),)
+
+    rigged = Rigged(**{f.name: getattr(rec, f.name)
+                       for f in rec.__dataclass_fields__.values()})
+    assert not _legal(rigged, ("i",), ("k",))
+    assert "i" not in candidate_space_loops(rigged)
 
 
 def test_validate_rejects_bad_recurrence():

@@ -43,18 +43,18 @@ def test_parity_covers_all_registered_recurrences():
     assert {n for n, _ in PARITY_CASES} == set(registry.registered_names())
     # acceptance floor: paper set + the beyond-paper workloads
     assert {"mm", "conv2d", "fir", "fft2d_stage",
-            "bmm", "jacobi2d", "jacobi2d_ms",
+            "bmm", "jacobi2d", "jacobi2d_ms", "jacobi2d_9pt",
             "mttkrp"} <= set(registry.registered_names())
 
 
-def test_systolic_hooks_cover_bmm_and_jacobi():
-    """mm, bmm and both jacobi2d stencils register chip-level lowerings —
-    no supports_systolic=False fallback for these specs (PR 4 tentpole)."""
-    for name in ("mm", "bmm", "jacobi2d", "jacobi2d_ms"):
-        spec = registry.get(name)
-        assert spec.supports_systolic, name
-        assert spec.systolic_lowering is not None, name
-        assert spec.allgather_lowering is not None, name
+def test_every_spec_is_systolic_capable():
+    """Registry invariant (PR 5 tentpole): every registered KernelSpec has
+    chip-level neighbour-stream + all-gather lowerings — there is no
+    supports_systolic=False fallback left anywhere in the registry."""
+    for spec in registry.specs():
+        assert spec.supports_systolic, spec.name
+        assert spec.systolic_lowering is not None, spec.name
+        assert spec.allgather_lowering is not None, spec.name
 
 
 @pytest.mark.parametrize("name,dtype", PARITY_CASES)
@@ -78,7 +78,11 @@ def test_backend_parity_pallas_vs_xla(name, dtype):
 
 _SYSTOLIC_CODE = r"""
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=@DEVICES@"
+    ).strip()
 import sys
 sys.path.insert(0, "src")
 import numpy as np, jax
@@ -87,9 +91,13 @@ from repro.core import Target, best_plan, lower_plan
 from repro.kernels import registry
 
 rng = np.random.default_rng(3)
-mesh = make_mesh((2, 2), ("data", "model"))
-target = Target(mesh_shape=(2, 2))
-for spec in registry.specs():
+mesh_shape = @MESH_SHAPE@
+devs = jax.devices()[: mesh_shape[0] * mesh_shape[1]]
+mesh = make_mesh(mesh_shape, ("data", "model"), devices=devs)
+target = Target(mesh_shape=mesh_shape)
+names = @NAMES@ or registry.registered_names()
+for name in names:
+    spec = registry.get(name)
     if not spec.supports_systolic:
         continue
     for dtype in spec.parity_dtypes:
@@ -110,22 +118,51 @@ for spec in registry.specs():
 """
 
 
-def test_backend_parity_systolic_where_supported():
-    """Chip-level schedules match xla for every supports_systolic spec
-    (2x2 host-device mesh; int dtypes exact via the acc_dtype ladder)."""
+def _run_systolic_subprocess(mesh_shape, names=()):
+    """Run the chip-level parity sweep on a forced host-device mesh and
+    return the per-combination result lines.  The device-count flag is
+    appended to any inherited XLA_FLAGS unless one is already present
+    (the dedicated CI parity job pins 8 devices); the mesh is built from
+    a device-list prefix so any count >= the mesh size works."""
+    code = (
+        _SYSTOLIC_CODE
+        .replace("@DEVICES@", str(mesh_shape[0] * mesh_shape[1]))
+        .replace("@MESH_SHAPE@", repr(tuple(mesh_shape)))
+        .replace("@NAMES@", repr(tuple(names)))
+    )
     proc = subprocess.run(
-        [sys.executable, "-c", _SYSTOLIC_CODE], capture_output=True,
+        [sys.executable, "-c", code], capture_output=True,
         text=True, cwd=".", timeout=600)
     assert proc.returncode == 0, proc.stderr[-2000:]
     lines = [ln for ln in proc.stdout.splitlines() if ":" in ln]
     assert lines, proc.stdout
     bad = [ln for ln in lines if not ln.endswith("OK")]
     assert not bad, bad
-    # every systolic-capable spec x dtype must have been exercised
+    return lines
+
+
+@pytest.mark.systolic
+def test_backend_parity_systolic_all_specs():
+    """Chip-level schedules match xla for EVERY registered spec (2x2
+    host-device mesh; int dtypes exact via the acc_dtype ladder) — the
+    full registry is systolic-capable as of PR 5."""
+    lines = _run_systolic_subprocess((2, 2))
+    # every spec x parity dtype x {systolic, allgather} must have run
     want = sum(
         2 * len(s.parity_dtypes)
         for s in registry.specs() if s.supports_systolic)
-    assert len(lines) == want, (len(lines), want, proc.stdout)
+    assert len(lines) == want, (len(lines), want, lines)
+
+
+@pytest.mark.systolic
+def test_backend_parity_systolic_nonsquare_mesh():
+    """The 1-D neighbour chains (conv2d, fir) and the width-2 halo
+    exchange (jacobi2d_9pt) do not need a square mesh: parity on a 2x4
+    chain/halo mesh (8 host devices) — the shape the Cannon rings reject."""
+    names = ("conv2d", "fir", "jacobi2d_9pt")
+    lines = _run_systolic_subprocess((2, 4), names)
+    want = sum(2 * len(registry.get(n).parity_dtypes) for n in names)
+    assert len(lines) == want, (len(lines), want, lines)
 
 
 def test_unregistered_recurrence_error():
@@ -221,20 +258,25 @@ def test_jacobi2d_odd_shapes(hw):
         rtol=1e-3)
 
 
-def _numpy_jacobi_sweeps(grid: np.ndarray, weights: np.ndarray) -> np.ndarray:
-    """Pure-numpy multi-sweep oracle, independent of kernels/ref.py: T
-    weighted 5-point sweeps with the boundary ring held fixed."""
-    from repro.core.recurrence import JACOBI2D_OFFSETS
-
+def _numpy_star_sweeps(grid: np.ndarray, weights: np.ndarray,
+                       offsets, pad: int) -> np.ndarray:
+    """Pure-numpy multi-sweep star oracle, independent of kernels/ref.py:
+    T weighted sweeps with the width-``pad`` boundary ring held fixed."""
     acc = np.int32 if np.issubdtype(grid.dtype, np.integer) else np.float32
     g = grid.astype(acc)
-    oh, ow = g.shape[0] - 2, g.shape[1] - 2
+    oh, ow = g.shape[0] - 2 * pad, g.shape[1] - 2 * pad
     for t in range(weights.shape[0]):
         new = np.zeros((oh, ow), acc)
-        for s, (di, dj) in enumerate(JACOBI2D_OFFSETS):
+        for s, (di, dj) in enumerate(offsets):
             new += g[di: di + oh, dj: dj + ow] * weights[t, s].astype(acc)
-        g[1:-1, 1:-1] = new
-    return g[1:-1, 1:-1]
+        g[pad:-pad, pad:-pad] = new
+    return g[pad:-pad, pad:-pad]
+
+
+def _numpy_jacobi_sweeps(grid: np.ndarray, weights: np.ndarray) -> np.ndarray:
+    from repro.core.recurrence import JACOBI2D_OFFSETS
+
+    return _numpy_star_sweeps(grid, weights, JACOBI2D_OFFSETS, pad=1)
 
 
 @pytest.mark.parametrize("dtype", ["float32", "int16"])
@@ -275,6 +317,73 @@ def test_jacobi2d_ms_odd_shapes():
     np.testing.assert_allclose(
         np.asarray(out), _numpy_jacobi_sweeps(np.asarray(grid), np.asarray(wts)),
         atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# width-k halos: the radius-2 9-point star vs pure-numpy sweeps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "int16"])
+def test_jacobi2d_9pt_matches_numpy_radius2_sweep(dtype):
+    """The radius-2 star through the full plan pipeline (IR builder ->
+    best_plan -> pallas kernel) vs an independent numpy radius-2 sweep;
+    the registered XLA oracle must agree with the same loop."""
+    from repro.core import jacobi2d_9pt
+    from repro.core.recurrence import JACOBI2D_9PT_OFFSETS
+
+    rng = np.random.default_rng(11)
+    h, w = 28, 24
+    if dtype.startswith("int"):
+        grid = rng.integers(-6, 6, (h + 4, w + 4)).astype(dtype)
+        wts = rng.integers(-3, 3, (1, 9)).astype(dtype)
+    else:
+        grid = rng.standard_normal((h + 4, w + 4)).astype(np.float32)
+        wts = (rng.standard_normal((1, 9)) * 0.1).astype(np.float32)
+    expect = _numpy_star_sweeps(grid.copy(), wts, JACOBI2D_9PT_OFFSETS,
+                                pad=2)
+
+    plan = best_plan(jacobi2d_9pt(h, w, dtype), CHIP)
+    out = lower_plan(plan, backend="pallas", interpret=True)(
+        jnp.asarray(grid), jnp.asarray(wts[0]))
+    exact = dtype.startswith("int")
+    np.testing.assert_allclose(
+        np.asarray(out, np.float64), expect.astype(np.float64),
+        atol=0.0 if exact else 1e-4, rtol=0.0 if exact else 1e-4)
+    np.testing.assert_allclose(
+        np.asarray(ref.jacobi2d_9pt(jnp.asarray(grid), jnp.asarray(wts[0])),
+                   np.float64),
+        expect.astype(np.float64),
+        atol=0.0 if exact else 1e-4, rtol=0.0 if exact else 1e-4)
+
+
+def test_jacobi2d_9pt_odd_shapes():
+    from repro.core.recurrence import JACOBI2D_9PT_OFFSETS
+
+    grid = jnp.asarray(_mk((37, 41), "float32"))
+    w = jnp.asarray(np.full((9,), 0.1, np.float32))
+    out = ops.jacobi2d_9pt(grid, w, bh=16, bw=16)
+    np.testing.assert_allclose(
+        np.asarray(out),
+        _numpy_star_sweeps(np.asarray(grid), np.asarray(w)[None, :],
+                           JACOBI2D_9PT_OFFSETS, pad=2),
+        atol=1e-4, rtol=1e-4)
+
+
+def test_halo_radius_from_ir_offsets():
+    """The halo width the chip-level exchange uses is derived from the IR
+    access functions: radius 1 for the 5-point stars, 2 for the 9-point
+    star, None/0 for non-stencil recurrences."""
+    from repro.core import jacobi2d as j5, jacobi2d_9pt as j9, matmul
+    from repro.core.recurrence import halo_radius, stencil_star
+
+    assert halo_radius(j5(8, 8), ("i", "j")) == 1
+    assert halo_radius(j9(8, 8), ("i", "j")) == 2
+    assert halo_radius(matmul(8, 8, 8), ("i", "j")) == 0
+    assert stencil_star(matmul(8, 8, 8)) is None
+    star = stencil_star(j9(8, 8))
+    assert star is not None and len(star) == 9
+    # star points carry signed offsets; no diagonals (no corner halos)
+    assert all((di == 0) or (dj == 0) for di, dj in star)
 
 
 @pytest.mark.parametrize("shape", [(40, 24, 10, 6), (33, 17, 8, 8)])

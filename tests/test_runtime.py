@@ -191,7 +191,8 @@ def test_plan_cache_mutation_isolated():
 
 def test_fft2d_stage_backends_agree():
     """xla and pallas backends share the (x_re, x_im) -> (re, im) contract
-    for fft2d_stage plans (and systolic rejects them explicitly)."""
+    for fft2d_stage plans (the systolic/allgather hooks honour the same
+    contract — covered by the subprocess parity sweep)."""
     from repro.core import lower_plan
 
     plan = best_plan(fft2d_stage(32, 32), CHIP)

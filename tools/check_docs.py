@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs gate: dead-link and registry-coverage checks (CI docs job).
 
-Two checks, so the docs cannot silently rot as the code grows:
+Three checks, so the docs cannot silently rot as the code grows:
 
 1. **Relative links** in README.md and docs/*.md must resolve: the target
    file must exist, and when a ``#fragment`` names a heading anchor the
@@ -11,6 +11,10 @@ Two checks, so the docs cannot silently rot as the code grows:
    importing ``repro.kernels.registry`` when the environment has the
    dependencies, falling back to parsing the registration source — the
    docs job runs dependency-free.
+3. **Systolic coverage**: every spec that registers a chip-level
+   ``systolic_lowering`` hook must also appear in docs/systolic.md (the
+   schedule-family guide) — a new hooked workload has to document which
+   schedule family serves it.
 
     python tools/check_docs.py          # exits non-zero on any failure
 """
@@ -25,6 +29,7 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
 ARCHITECTURE = ROOT / "docs" / "architecture.md"
+SYSTOLIC_DOC = ROOT / "docs" / "systolic.md"
 
 # [text](target) — excluding images handled the same way is fine too
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
@@ -103,6 +108,26 @@ def registered_names() -> list[str]:
         return sorted(set(names))
 
 
+def systolic_hooked_names() -> list[str]:
+    """Specs with a chip-level systolic_lowering hook — via import when
+    possible, else by parsing each register(...) block for the hook
+    field (dependency-free docs job)."""
+    try:
+        sys.path.insert(0, str(ROOT / "src"))
+        from repro.kernels import registry  # type: ignore
+
+        return [s.name for s in registry.specs() if s.supports_systolic]
+    except Exception:
+        src = (ROOT / "src/repro/kernels/registry.py").read_text(
+            encoding="utf-8")
+        hooked = []
+        for block in src.split("register(KernelSpec(")[1:]:
+            m = _SPEC_NAME.search(block)
+            if m and "systolic_lowering=" in block:
+                hooked.append(m.group(1))
+        return sorted(set(hooked))
+
+
 def check_registry_coverage(names: list[str]) -> list[str]:
     if not ARCHITECTURE.exists():
         return ["docs/architecture.md missing (registry coverage check)"]
@@ -114,16 +139,30 @@ def check_registry_coverage(names: list[str]) -> list[str]:
     ]
 
 
+def check_systolic_coverage(hooked: list[str]) -> list[str]:
+    if not SYSTOLIC_DOC.exists():
+        return ["docs/systolic.md missing (systolic coverage check)"]
+    text = SYSTOLIC_DOC.read_text(encoding="utf-8")
+    return [
+        f"docs/systolic.md: systolic-hooked spec {name!r} is not "
+        "documented (which schedule family serves it?)"
+        for name in hooked
+        if f"`{name}`" not in text
+    ]
+
+
 def main() -> int:
     names = registered_names()
-    errors = check_links() + check_registry_coverage(names)
+    hooked = systolic_hooked_names()
+    errors = (check_links() + check_registry_coverage(names)
+              + check_systolic_coverage(hooked))
     for e in errors:
         print(f"FAIL {e}")
     n_links = sum(
         len(_LINK.findall(prose_of(d))) for d in DOC_FILES if d.exists())
     print(f"check_docs: {len(DOC_FILES)} files, {n_links} links, "
-          f"{len(names)} registered specs -> "
-          f"{'FAILED' if errors else 'OK'}")
+          f"{len(names)} registered specs ({len(hooked)} systolic-hooked) "
+          f"-> {'FAILED' if errors else 'OK'}")
     return 1 if errors else 0
 
 

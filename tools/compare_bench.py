@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Bench-regression gate: compare a fresh ``benchmarks/run.py --ci`` JSON
+against the committed baseline (``benchmarks/BENCH_PR5.json``).
+
+Timings from different machines are not comparable raw, so the gate is
+*machine-normalized*: it computes the per-spec ratio new/baseline, takes
+the median ratio as the machine-speed factor, and fails only when one
+spec's ratio exceeds ``--tolerance`` (default 2.0) times that median —
+i.e. when a spec got >2x slower *relative to the rest of the suite*.
+Plan-cache counters are deterministic, so they compare exactly:
+
+  * a spec present in the baseline but missing from the fresh run fails
+    (a spec was dropped from the registry or stopped benching);
+  * ``plan_cache_misses`` may not increase (the spec started re-planning);
+  * ``replan_hits`` must stay >= 1 (the LRU plan-cache contract).
+
+    python tools/compare_bench.py benchmarks/BENCH_PR5.json BENCH_NEW.json
+
+Exit code 0 = within tolerance, 1 = regression.  Dependency-free.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _median(xs: list[float]) -> float:
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else (s[n // 2 - 1] + s[n // 2]) / 2.0
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
+    errors: list[str] = []
+    base_specs = baseline.get("specs", {})
+    new_specs = fresh.get("specs", {})
+
+    missing = sorted(set(base_specs) - set(new_specs))
+    for name in missing:
+        errors.append(f"{name}: in baseline but missing from fresh run")
+    added = sorted(set(new_specs) - set(base_specs))
+    for name in added:
+        print(f"note: {name} is new (no baseline) — seed it on the next "
+              "baseline refresh")
+
+    common = sorted(set(base_specs) & set(new_specs))
+    ratios = {}
+    for name in common:
+        b, n = base_specs[name], new_specs[name]
+        if n.get("plan_cache_misses", 0) > b.get("plan_cache_misses", 0):
+            errors.append(
+                f"{name}: plan-cache misses grew "
+                f"{b.get('plan_cache_misses')} -> "
+                f"{n.get('plan_cache_misses')} (spec re-plans)")
+        if n.get("replan_hits", 1) < 1:
+            errors.append(
+                f"{name}: re-planning the same recurrence missed the LRU "
+                "plan cache")
+        if b.get("us_per_call", 0) > 0:
+            ratios[name] = n["us_per_call"] / b["us_per_call"]
+
+    if ratios:
+        med = _median(list(ratios.values()))
+        print(f"machine-speed factor (median new/baseline): {med:.2f}x")
+        for name in common:
+            if name not in ratios:
+                continue
+            rel = ratios[name] / max(med, 1e-9)
+            flag = "REGRESSED" if rel > tolerance else "ok"
+            print(f"  {name:14s} base={base_specs[name]['us_per_call']:10.1f}us "
+                  f"new={new_specs[name]['us_per_call']:10.1f}us "
+                  f"rel={rel:5.2f}x  {flag}")
+            if rel > tolerance:
+                errors.append(
+                    f"{name}: {rel:.2f}x slower than the suite median "
+                    f"(tolerance {tolerance:.1f}x)")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_PR5.json")
+    ap.add_argument("fresh", help="fresh run.py --ci output")
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="allowed per-spec slowdown relative to the "
+                         "suite-median machine factor (default 2.0)")
+    args = ap.parse_args()
+    with open(args.baseline, encoding="utf-8") as f:
+        baseline = json.load(f)
+    with open(args.fresh, encoding="utf-8") as f:
+        fresh = json.load(f)
+    errors = compare(baseline, fresh, args.tolerance)
+    for e in errors:
+        print(f"FAIL {e}")
+    n = len(baseline.get("specs", {}))
+    print(f"compare_bench: {n} baseline specs -> "
+          f"{'FAILED' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
