@@ -1,17 +1,18 @@
-"""Mapping quality benchmarks.
+"""Mapping quality benchmarks — a thin driver over the autotuner.
 
 1. Algorithm 1 vs naive PLIO placement: max column congestion across array
    shapes (the paper's 'constraints make compilation succeed' claim,
    quantified).
-2. WideSA systolic (Cannon/ppermute) vs GSPMD all-gather matmul at chip
-   level: collective bytes from lowered HLO on a 16-device sub-mesh
-   (spawned in a subprocess so the bench process keeps 1 visible device).
-3. Table IV analogue: WideSA (AIE) vs PL-only (AutoSA) energy-efficiency
+2. Measured backend crossover: ``core.autotune.race`` times every backend
+   each spec can run in-process (pallas vs XLA at mesh 1x1) and reports
+   the winner next to the committed default table's entry — the same
+   measurement ``tools/gen_autotune.py`` persists, run live.
+3. Chip-level race: the same race on a 16-device (4,4) sub-mesh (spawned
+   in a subprocess with forced host devices so this process keeps 1
+   visible device), putting the systolic/allgather schedules into the
+   field against pallas/XLA.
+4. Table IV analogue: WideSA (AIE) vs PL-only (AutoSA) energy-efficiency
    ratios recomputed from the paper's numbers against our bounds.
-4. End-to-end plan quality: the mapper's ranked plans executed through
-   ``runtime.execute_plan`` — interpret-mode wall time per plan next to its
-   predicted utilization, so mapping quality is measured on real kernels
-   rather than only on the structural model.
 """
 
 from __future__ import annotations
@@ -21,44 +22,26 @@ import subprocess
 import sys
 import time
 
-import numpy as np
-import jax.numpy as jnp
-
-from repro.core import AIE_TARGET, Target, enumerate_schedules, map_recurrence, matmul
-from repro.core.mapper import plan_cache_info
+from repro.core import AIE_TARGET, Target, autotune, enumerate_schedules, matmul
 from repro.core.plio import assign_plios, build_mapped_graph, congestion, naive_assignment
-from repro.kernels import execute_plan, ref
+from repro.kernels import registry
 
 _SUBPROC = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
-import json, re, sys
+import json, sys
 sys.path.insert(0, "src")
-import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-from repro.compat import cost_analysis, make_mesh
-from repro.core import Target, best_plan, lower_plan, matmul
-from repro.core.roofline import collective_bytes
+from repro.core import Target, autotune, matmul
 
-mesh = make_mesh((4, 4), ("data", "model"))
-target = Target(mesh_shape=(4, 4))
-rec = matmul(2048, 2048, 2048, "float32")
-plan = best_plan(rec, target)
-out = {}
-for backend in ("systolic", "allgather"):
-    fn = lower_plan(plan, backend=backend, mesh=mesh)
-    a = jax.ShapeDtypeStruct((2048, 2048), jnp.float32)
-    b = jax.ShapeDtypeStruct((2048, 2048), jnp.float32)
-    lowered = jax.jit(fn).lower(a, b)
-    compiled = lowered.compile()
-    coll = collective_bytes(compiled.as_text())
-    coll.pop("_counts", None)
-    out[backend] = {
-        "coll_bytes": coll,
-        "flops": cost_analysis(compiled).get("flops", 0.0),
-    }
-print(json.dumps(out))
+rec = matmul(256, 256, 256, "float32")
+policy = autotune.PlanPolicy(mode="measured", reps=2, warmup=1)
+res = autotune.race(rec, Target(name="chip_4x4", mesh_shape=(4, 4)), policy)
+print(json.dumps(res))
 """
+
+# specs raced in-process for section 2; smoke shapes keep interpret-mode
+# pallas affordable while still crossing the pallas/XLA break-even
+_RACE_SPECS = ("mm", "jacobi2d", "fir", "mttkrp")
 
 
 def run(csv_rows: list):
@@ -83,7 +66,30 @@ def run(csv_rows: list):
             (f"plio_alg1_{shape[0]}x{shape[1]}", us,
              f"cong={c1};naive={c0};rc={AIE_TARGET.rc}"))
 
-    print("\n== chip-level: WideSA systolic vs GSPMD all-gather MM ==")
+    print("\n== measured backend crossover (autotune race, mesh 1x1) ==")
+    target = Target(name="single_chip", mesh_shape=(1, 1))
+    policy = autotune.PlanPolicy(mode="measured", reps=3, warmup=1)
+    try:
+        committed = autotune.load_table(autotune.DEFAULT_TABLE_PATH)
+    except autotune.TableError:
+        committed = {"entries": {}}
+    for name in _RACE_SPECS:
+        spec = registry.get(name)
+        rec = spec.builder(*spec.smoke_args, spec.parity_dtypes[0])
+        res = autotune.race(rec, target, policy,
+                            backends=("pallas", "xla"))
+        entry = committed["entries"].get(
+            autotune.autotune_key(rec, target.mesh_shape), {})
+        agree = ("=table" if entry.get("backend") == res["backend"]
+                 else f"table={entry.get('backend', '?')}")
+        times = "  ".join(f"{b}={u:9.1f}us" for b, u in
+                          sorted(res["us"].items()))
+        print(f"  {name:13s} {times}  -> {res['backend']} ({agree})")
+        csv_rows.append(
+            (f"autotune_race_{name}", res["us"][res["backend"]],
+             f"winner={res['backend']};{agree}"))
+
+    print("\n== chip-level race: systolic/allgather vs pallas/XLA (4x4) ==")
     t0 = time.perf_counter()
     proc = subprocess.run(
         [sys.executable, "-c", _SUBPROC], capture_output=True, text=True,
@@ -93,42 +99,13 @@ def run(csv_rows: list):
     if proc.returncode != 0:
         print("subprocess failed:", proc.stderr[-500:])
         return
-    out = json.loads(proc.stdout.strip().splitlines()[-1])
-    for backend, d in out.items():
-        total = sum(d["coll_bytes"].values())
-        print(f"  {backend:10s} collective bytes/device: {total/2**20:8.2f}"
-              f" MiB  {d['coll_bytes']}")
+    res = json.loads(proc.stdout.strip().splitlines()[-1])
+    for backend, us in sorted(res["us"].items(), key=lambda kv: kv[1]):
+        mark = " <- winner" if backend == res["backend"] else ""
+        print(f"  {backend:10s} {us:12.1f} us{mark}")
         csv_rows.append(
-            (f"mapping_{backend}_mm2048", dt * 1e6 / 2,
-             f"coll_MiB={total/2**20:.2f}"))
-    sy = sum(out["systolic"]["coll_bytes"].values())
-    ag = sum(out["allgather"]["coll_bytes"].values())
-    if sy:
-        print(f"  -> systolic moves {ag/sy:.2f}x fewer(>1)/more(<1) bytes "
-              f"than all-gather")
-
-    print("\n== plan-driven execution: ranked plans through execute_plan ==")
-    rng = np.random.default_rng(0)
-    rec = matmul(512, 512, 512, "float32")
-    a = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
-    b = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
-    oracle = np.asarray(ref.matmul(a, b))
-    plans = map_recurrence(rec, Target(name="single_chip",
-                                       mesh_shape=(1, 1)), top_k=3)
-    for rank, plan in enumerate(plans):
-        out = execute_plan(plan, a, b)  # warm/compile
-        ok = bool(np.allclose(np.asarray(out), oracle, atol=1e-3))
-        t0 = time.perf_counter()
-        for _ in range(3):
-            jnp.asarray(execute_plan(plan, a, b)).block_until_ready()
-        us = (time.perf_counter() - t0) / 3 * 1e6
-        print(f"  plan#{rank}: util={plan.predicted_utilization:6.1%} "
-              f"block={plan.partition.block}  {us:10.0f} us  "
-              f"{'OK' if ok else 'MISMATCH'}")
-        csv_rows.append((f"mapping_exec_mm512_rank{rank}", us,
-                         f"util={plan.predicted_utilization:.3f};ok={ok}"))
-    ci = plan_cache_info()
-    print(f"  plan cache: hits={ci.hits} misses={ci.misses}")
+            (f"mapping_race44_{backend}_mm256", us,
+             f"winner={res['backend']};subproc_s={dt:.1f}"))
 
     print("\n== Table IV analogue (energy-efficiency ratios, from paper) ==")
     # paper Table IV: norm. TOPS/W of WideSA vs PL-only

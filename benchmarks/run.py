@@ -5,9 +5,12 @@ Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
     PYTHONPATH=src python -m benchmarks.run [--only recurrences,...]
 
 ``--ci`` runs the bench-regression gate's measurement pass instead: one
-plan-driven smoke execution per registered spec (timing + plan-cache
-counters) written as JSON.  CI compares the fresh file against the
-committed ``benchmarks/BENCH_PR5.json`` baseline with
+plan-driven smoke execution per registered spec (timing + plan-cache +
+autotune counters) written as JSON.  Planning consults the committed
+autotune crossover table under ``PlanPolicy(mode="cached")`` — each
+spec's row records which measured backend won and whether the table was
+hit — and execution dispatches to that winner.  CI compares the fresh
+file against the committed ``benchmarks/BENCH_PR6.json`` baseline with
 ``tools/compare_bench.py`` (ratios are machine-normalized, so only real
 >2x per-spec regressions fail the gate — see that tool's docstring).
 
@@ -21,16 +24,22 @@ import time
 
 
 def ci_bench(out_path: str) -> dict:
-    """Per-spec smoke timings + plan-cache hit counts for the CI gate.
+    """Per-spec smoke timings + plan-cache/autotune counts for the gate.
 
     For every registered KernelSpec: build the smoke-size recurrence on
-    its first parity dtype, plan it, execute through ``execute_plan``
-    (compile excluded), and record
+    its first parity dtype, plan it under ``PlanPolicy(mode="cached")``
+    (the committed crossover table supplies the measured winner — no
+    timing happens at plan time), execute through the winner backend's
+    lowering (compile excluded), and record
 
       * ``us_per_call``        — mean of 3 timed calls (interpret mode on
                                  CPU: a *relative* smoke number, compared
                                  against the baseline only after machine
                                  normalization);
+      * ``backend``            — the measured winner dispatched to;
+      * ``autotune_hit``       — whether planning hit the committed table
+                                 (a true -> false flip means a spec lost
+                                 its table coverage: a real regression);
       * ``plan_cache_misses``  — cache misses this spec's planning cost
                                  (deterministic: a growth means the spec
                                  started re-planning, a real regression);
@@ -41,44 +50,60 @@ def ci_bench(out_path: str) -> dict:
     import numpy as np
     import jax.numpy as jnp
 
-    from repro.core import Target, best_plan
+    from repro.core import PlanPolicy, Target, best_plan
+    from repro.core.autotune import counters
+    from repro.core.codegen import lower_plan
     from repro.core.mapper import plan_cache_clear, plan_cache_info
-    from repro.kernels import execute_plan, registry
+    from repro.kernels import registry
 
     target = Target(name="single_chip", mesh_shape=(1, 1))
+    policy = PlanPolicy(mode="cached")
     plan_cache_clear()
     rng = np.random.default_rng(0)
     specs_out: dict = {}
     for spec in registry.specs():
         dtype = spec.parity_dtypes[0]
         misses_before = plan_cache_info().misses
+        measured_before = counters()["measure_calls"]
         rec = spec.builder(*spec.smoke_args, dtype)
-        plan = best_plan(rec, target)
+        plan = best_plan(rec, target, policy=policy)
+        assert counters()["measure_calls"] == measured_before, \
+            "cached policy must not time at plan time"
+        mesh = None
+        if plan.backend in ("systolic", "allgather"):
+            from repro.compat import make_mesh
+            mesh = make_mesh(target.mesh_shape, ("row", "col"))
+        fn = lower_plan(plan, backend=plan.backend, mesh=mesh)
         operands = spec.operands(rec, rng)
-        execute_plan(plan, *operands)  # compile outside the timed loop
+        fn(*operands)  # compile outside the timed loop
         reps = 3
         t0 = time.perf_counter()
         for _ in range(reps):
-            out = execute_plan(plan, *operands)
+            out = fn(*operands)
             for leaf in out if isinstance(out, tuple) else (out,):
                 jnp.asarray(leaf).block_until_ready()
         us = (time.perf_counter() - t0) / reps * 1e6
         hits_before = plan_cache_info().hits
-        best_plan(spec.builder(*spec.smoke_args, dtype), target)
+        best_plan(spec.builder(*spec.smoke_args, dtype), target,
+                  policy=policy)
         specs_out[spec.name] = {
             "dtype": dtype,
             "us_per_call": round(us, 1),
+            "backend": plan.backend,
+            "autotune_hit": plan.provenance == "measured",
             "plan_cache_misses": plan_cache_info().misses - misses_before,
             "replan_hits": plan_cache_info().hits - hits_before,
         }
         print(f"ci-bench {spec.name:13s} {dtype:8s} {us:10.1f} us  "
+              f"backend={plan.backend}"
+              f"[{'hit' if plan.provenance == 'measured' else 'miss'}] "
               f"misses={specs_out[spec.name]['plan_cache_misses']} "
               f"replan_hits={specs_out[spec.name]['replan_hits']}")
     payload = {
-        "schema": 1,
-        "note": ("per-spec smoke timings (interpret mode) + plan-cache "
-                 "counters; compare with tools/compare_bench.py, never "
-                 "raw across machines"),
+        "schema": 2,
+        "note": ("per-spec smoke timings (interpret mode, autotuned "
+                 "backend) + plan-cache/autotune counters; compare with "
+                 "tools/compare_bench.py, never raw across machines"),
         "specs": specs_out,
     }
     with open(out_path, "w", encoding="utf-8") as f:
@@ -96,7 +121,7 @@ def main() -> None:
                          "smoke timings + plan-cache counters as JSON")
     ap.add_argument("--out", default="BENCH_NEW.json",
                     help="output path for --ci (pass "
-                         "benchmarks/BENCH_PR5.json explicitly when "
+                         "benchmarks/BENCH_PR6.json explicitly when "
                          "refreshing the committed baseline)")
     args = ap.parse_args()
     if args.ci:

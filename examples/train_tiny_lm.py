@@ -17,7 +17,10 @@ import os
 # XLA fallback here (the planned path is exercised by the test suite,
 # bench_planned and the serve smoke); export REPRO_PLANNED=on to force
 # mapper-planned kernels anyway, e.g. on a real TPU.
-os.environ.setdefault("REPRO_PLANNED", "off")
+from repro.kernels import planned
+
+if os.environ.get(planned.PLANNED_ENV) is None:
+    planned.configure(enabled=False)
 
 from repro.configs import get_config
 from repro.configs.base import ShapeSpec

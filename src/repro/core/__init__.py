@@ -6,6 +6,7 @@ Pipeline (paper §III-IV):
     partition.py   — array partition + latency hiding + multiple threading
     plio.py        — mapped graph, congestion model, Algorithm 1
     mapper.py      — search + cost model -> ExecutionPlan
+    autotune.py    — measured backend crossover table (PlanPolicy)
     codegen.py     — ExecutionPlan -> JAX callable (pallas/xla/systolic)
     roofline.py    — 3-term roofline from compiled HLO
 """
@@ -34,6 +35,7 @@ from .plio import (
     is_feasible,
 )
 from .mapper import AIE_TARGET, ExecutionPlan, Target, best_plan, map_recurrence
+from .autotune import PlanPolicy, PlanRequest
 from .codegen import lower_plan
 
 __all__ = [
@@ -46,5 +48,6 @@ __all__ = [
     "MappedGraph", "build_mapped_graph", "assign_plios", "congestion",
     "is_feasible",
     "Target", "AIE_TARGET", "ExecutionPlan", "map_recurrence", "best_plan",
+    "PlanPolicy", "PlanRequest",
     "lower_plan",
 ]

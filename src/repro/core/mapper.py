@@ -82,7 +82,14 @@ AIE_TARGET = Target(
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
-    """Everything codegen needs, plus the model-predicted performance."""
+    """Everything codegen needs, plus the model-predicted performance.
+
+    ``backend``/``provenance`` record the *backend decision* layered on
+    top of the modelled mapping: the mapper always emits
+    ``("pallas", "modelled")``; ``best_plan(..., policy=...)`` may
+    restamp them from the autotune crossover table (``core/autotune.py``)
+    to the measured winner, in which case provenance reads "measured".
+    """
 
     recurrence: UniformRecurrence
     schedule: SystolicSchedule
@@ -95,6 +102,8 @@ class ExecutionPlan:
     predicted_tops: float
     predicted_utilization: float
     feasible: bool
+    backend: str = "pallas"
+    provenance: str = "modelled"
 
     def describe(self) -> str:
         return (
@@ -102,7 +111,8 @@ class ExecutionPlan:
             f"{self.schedule.describe()} | {self.partition.describe()} | "
             f"pred={self.predicted_tops:.2f}TOPS util={self.predicted_utilization:.1%} "
             f"feasible={self.feasible} maxCong=({max(self.congestion_west)},"
-            f"{max(self.congestion_east)})"
+            f"{max(self.congestion_east)}) backend={self.backend}"
+            f"[{self.provenance}]"
         )
 
 
@@ -282,9 +292,26 @@ plan_cache_info = _map_recurrence_cached.cache_info
 plan_cache_clear = _map_recurrence_cached.cache_clear
 
 
-def best_plan(rec: UniformRecurrence, target: Target = Target()) -> ExecutionPlan:
+def best_plan(rec: UniformRecurrence, target: Target = Target(),
+              policy=None) -> ExecutionPlan:
+    """The single planning entrypoint: modelled mapping + policy-driven
+    backend decision.
+
+    ``policy`` is a ``core.autotune.PlanPolicy`` (or None == modelled):
+    "modelled" returns the mapper's choice untouched; "cached" consults
+    the persisted crossover table and stamps the measured winner on a
+    hit (misses fall back to the modelled choice without timing
+    anything); "measured" additionally races the backends on a miss and
+    persists the winner.  Every plan surface — ``kernels/planned.py``,
+    ``serve/engine.py``, the benches — routes through here.
+    """
     # top_k=1: a cache hit copies one plan, not the default five
     plans = map_recurrence(rec, target, top_k=1)
     if not plans:
         raise RuntimeError(f"no feasible mapping for {rec.name}")
-    return plans[0]
+    plan = plans[0]
+    if policy is None or policy.mode == "modelled":
+        return plan
+    from . import autotune  # late: autotune imports this module
+
+    return autotune.apply_policy(plan, policy)

@@ -4,15 +4,27 @@ The WideSA claim is that one space-time mapping pipeline — not per-kernel
 hand tuning — should pick the tiling for every uniform recurrence.  This
 module is where the *application* stack (models/layers.py, serve/engine.py)
 cashes that in: ``planned_dense(x, w)`` and ``planned_bmm(a, b)`` normalize
-the call-site shapes onto the registered ``mm``/``bmm`` recurrences, ask
-``core.mapper.best_plan`` for the mapping (shape-keyed, hitting the
-existing LRU plan cache) and dispatch through ``runtime.execute_plan``.
+the call-site shapes onto the registered ``mm``/``bmm`` recurrences, build
+one ``core.autotune.PlanRequest`` per shape and resolve it through
+``core.mapper.best_plan`` (shape-keyed, hitting the existing LRU plan
+cache *and* the autotune crossover table per the active ``PlanPolicy``),
+then dispatch through the plan's chosen backend (``runtime.execute_plan``
+for pallas, the registered XLA lowering when the measured winner is xla).
+
+Configuration is one call (no env-var sprawl):
+
+    planned.configure(enabled=True, policy=PlanPolicy(mode="cached"))
+    with planned.override(enabled=False):   # scoped: restores on exit
+        ...
+
+``REPRO_PLANNED=off`` remains as a *deprecated* alias consulted only
+when ``configure`` was never called; it emits a DeprecationWarning once
+per process.
 
 Fallback rules (all land on the registry's XLA reference lowering, so the
 two paths are interchangeable):
 
-  * ``REPRO_PLANNED=off`` (or ``0``/``false``/``no``) — global escape hatch,
-    read at trace time;
+  * planning disabled (``configure(enabled=False)`` / the env alias);
   * dtypes the MXU contract does not cover (or mismatched operand dtypes);
   * shapes the mapper cannot produce a *feasible* plan for (degenerate
     extents, ragged heads, tiny decode dims that defeat the PLIO model).
@@ -22,28 +34,33 @@ planned through the same facade, so training traffic (value_and_grad
 through the model stack) runs on mapper-planned tiles in both directions.
 
 ``planned_report()`` exposes per-call-site counters (planned vs fallback,
-fallback reasons, the plan actually used) so benches and tests can assert
-which call sites executed mapper-planned kernels.  Decisions happen at
-*trace* time: a jitted model counts once per compilation, not once per
-step — which is exactly the "plan once per shape, execute many" contract.
+fallback reasons, the executed backend mix, autotune-table hit/miss, the
+plan actually used) so benches and tests can assert which call sites
+executed mapper-planned kernels and whether the measured path served
+them.  Decisions happen at *trace* time: a jitted model counts once per
+compilation, not once per step — which is exactly the "plan once per
+shape, execute many" contract.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import math
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import recurrence as ir
-from repro.core.mapper import ExecutionPlan, Target, best_plan
+from repro.core.autotune import PlanPolicy, PlanRequest, resolve
+from repro.core.mapper import ExecutionPlan, Target
 
 from . import ref
 
-#: Environment escape hatch: set REPRO_PLANNED=off to force XLA everywhere.
+#: Deprecated environment alias: set REPRO_PLANNED=off to force XLA
+#: everywhere *when configure() was never called*.  Prefer configure().
 PLANNED_ENV = "REPRO_PLANNED"
 _OFF = frozenset({"off", "0", "false", "no"})
 
@@ -57,43 +74,120 @@ PLANNED_TARGET = Target(name="planned_chip", mesh_shape=(1, 8))
 SUPPORTED_DTYPES = frozenset(
     {"float32", "bfloat16", "int8", "int16", "int32"})
 
+#: Default policy: consult the committed crossover table, never measure
+#: at call time (cache misses fall back to the modelled choice).
+DEFAULT_POLICY = PlanPolicy(mode="cached")
+
+
+# ---------------------------------------------------------------------------
+# configuration: one configure() call + a scoped override
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlannedConfig:
+    """The facade's whole configuration surface."""
+
+    enabled: bool = True
+    policy: PlanPolicy = DEFAULT_POLICY
+
+
+#: None = configure() never called -> defaults + the deprecated env alias.
+_CONFIG: PlannedConfig | None = None
+_ENV_WARNED = False
+
+
+def configure(enabled: bool | None = None,
+              policy: PlanPolicy | None = None) -> PlannedConfig:
+    """Set the facade configuration; unspecified fields keep their
+    current effective value.  Returns the new config.  Once called, the
+    deprecated ``REPRO_PLANNED`` env alias is ignored."""
+    global _CONFIG
+    base = current_config()
+    _CONFIG = PlannedConfig(
+        enabled=base.enabled if enabled is None else bool(enabled),
+        policy=base.policy if policy is None else policy,
+    )
+    return _CONFIG
+
+
+@contextlib.contextmanager
+def override(enabled: bool | None = None,
+             policy: PlanPolicy | None = None):
+    """Scoped ``configure``: applies inside the ``with`` block, restores
+    the previous configuration (including "never configured") on exit."""
+    global _CONFIG
+    prev = _CONFIG
+    try:
+        yield configure(enabled=enabled, policy=policy)
+    finally:
+        _CONFIG = prev
+
+
+def reset_configuration() -> None:
+    """Back to "never configured" (defaults + env alias) — test hook."""
+    global _CONFIG
+    _CONFIG = None
+
+
+def _env_enabled() -> bool | None:
+    """The deprecated REPRO_PLANNED alias; warns once per process."""
+    global _ENV_WARNED
+    raw = os.environ.get(PLANNED_ENV)
+    if raw is None:
+        return None
+    if not _ENV_WARNED:
+        _ENV_WARNED = True
+        warnings.warn(
+            f"{PLANNED_ENV} is deprecated; call "
+            "repro.kernels.planned.configure(enabled=...) (or the "
+            "override() context manager) instead",
+            DeprecationWarning, stacklevel=3)
+    return raw.strip().lower() not in _OFF
+
+
+def current_config() -> PlannedConfig:
+    """The effective configuration: explicit ``configure`` wins, else
+    the env alias (deprecated), else the defaults."""
+    if _CONFIG is not None:
+        return _CONFIG
+    env = _env_enabled()
+    if env is None:
+        return PlannedConfig()
+    return PlannedConfig(enabled=env)
+
 
 def planned_enabled() -> bool:
-    """The REPRO_PLANNED switch, read at call (= trace) time."""
-    return os.environ.get(PLANNED_ENV, "on").strip().lower() not in _OFF
+    """Whether the facade plans at all, read at call (= trace) time."""
+    return current_config().enabled
+
+
+def current_policy() -> PlanPolicy:
+    return current_config().policy
 
 
 # ---------------------------------------------------------------------------
-# plan lookup (shape-keyed, backed by the mapper's LRU plan cache)
+# plan lookup: every surface builds the same PlanRequest
 # ---------------------------------------------------------------------------
 
-_BUILDERS = {"mm": ir.matmul, "bmm": ir.batched_matmul}
+def plan_request(kind: str, shape, dtype: str,
+                 target: Target | None = None,
+                 policy: PlanPolicy | None = None) -> PlanRequest:
+    """The one way a facade surface describes a plan lookup."""
+    return PlanRequest(
+        kind=kind,
+        shape=tuple(int(d) for d in shape),
+        dtype=str(dtype),
+        target=target or PLANNED_TARGET,
+        policy=policy or current_policy(),
+    )
 
 
-@functools.lru_cache(maxsize=4096)
-def _plan_or_none(
-    kind: str, shape: tuple[int, ...], dtype: str, target: Target
-) -> ExecutionPlan | None:
-    """Best feasible plan for an mm/bmm shape, or None (-> XLA fallback).
-
-    ``shape`` is the *recurrence* extent tuple: (m, n, k) for mm,
-    (b, m, n, k) for bmm.  Caching the None outcome here keeps repeat
-    infeasible shapes from re-running the mapper search each trace.
-    """
-    if any(d <= 0 for d in shape):
-        return None
-    try:
-        plan = best_plan(_BUILDERS[kind](*shape, dtype), target)
-    except RuntimeError:
-        return None
-    return plan if plan.feasible else None
-
-
-def plan_for(kind: str, shape: tuple[int, ...], dtype: str,
-             target: Target | None = None) -> ExecutionPlan | None:
-    """Public shape->plan lookup used by benches and tests."""
-    return _plan_or_none(kind, tuple(int(d) for d in shape), dtype,
-                         target or PLANNED_TARGET)
+def plan_for(kind: str, shape, dtype: str,
+             target: Target | None = None,
+             policy: PlanPolicy | None = None) -> ExecutionPlan | None:
+    """Public shape->plan lookup used by benches and tests.  Returns the
+    best *feasible* plan (backend-stamped per the policy) or None."""
+    return resolve(plan_request(kind, shape, dtype, target, policy))
 
 
 # ---------------------------------------------------------------------------
@@ -107,6 +201,9 @@ class SiteStats:
     planned: int = 0
     fallback: int = 0
     reasons: dict = dataclasses.field(default_factory=dict)
+    backends: dict = dataclasses.field(default_factory=dict)
+    autotune: dict = dataclasses.field(
+        default_factory=lambda: {"hit": 0, "miss": 0})
     last_shape: tuple = ()
     last_plan: str = ""
 
@@ -115,6 +212,8 @@ class SiteStats:
             "planned": self.planned,
             "fallback": self.fallback,
             "reasons": dict(self.reasons),
+            "backends": dict(self.backends),
+            "autotune": dict(self.autotune),
             "last_shape": self.last_shape,
             "last_plan": self.last_plan,
         }
@@ -129,13 +228,17 @@ def _record(site: str, shape, *, plan=None, reason=None):
     if plan is not None:
         st.planned += 1
         st.last_plan = plan.describe()
+        st.backends[plan.backend] = st.backends.get(plan.backend, 0) + 1
+        bucket = "hit" if plan.provenance == "measured" else "miss"
+        st.autotune[bucket] += 1
     else:
         st.fallback += 1
         st.reasons[reason] = st.reasons.get(reason, 0) + 1
 
 
 def planned_report() -> dict[str, dict]:
-    """Snapshot of per-site decisions: {site: {planned, fallback, ...}}."""
+    """Snapshot of per-site decisions: {site: {planned, fallback,
+    reasons, backends, autotune hit/miss, last plan}}."""
     return {site: st.as_dict() for site, st in sorted(_REPORT.items())}
 
 
@@ -154,15 +257,24 @@ def _decide(kind: str, shape: tuple[int, ...], a_dtype, b_dtype):
     da, db = jnp.dtype(a_dtype).name, jnp.dtype(b_dtype).name
     if da != db or da not in SUPPORTED_DTYPES:
         return None, f"dtype:{da}x{db}"
-    plan = _plan_or_none(kind, shape, da, PLANNED_TARGET)
+    plan = resolve(plan_request(kind, shape, da))
     if plan is None:
         return None, "infeasible"
     return plan, None
 
 
 def _execute(plan: ExecutionPlan, *operands, out_dtype=None):
-    from .runtime import execute_plan  # late: avoids import cycles
+    from . import registry  # late: avoids import cycles
+    from .runtime import execute_plan
 
+    if plan.backend == "xla":
+        # the crossover table measured the reference lowering as the
+        # winner for this shape — run it, matching the pallas kernels'
+        # out_dtype contract (accumulator flush, no operand upcast)
+        if plan.recurrence.name == "bmm":
+            return _bmm_fallback(*operands, out_dtype)
+        out = registry.get(plan.recurrence.name).xla(*operands)
+        return out if out_dtype is None else out.astype(out_dtype)
     return execute_plan(plan, *operands, out_dtype=out_dtype)
 
 

@@ -28,7 +28,10 @@ of the mapper need:
     parity_dtypes  dtypes the backend-parity suite sweeps
     atol           float comparison tolerance for parity (ints are exact)
     smoke_args     reduced builder sizes for smoke runs
-    bench_cases    (dtype, builder args) table rows for the benchmark
+    bench_cases    (dtype, builder args) table rows for the benchmark —
+                   these double as the autotune crossover-table keys
+                   (``autotune_cases``/``core/autotune.py``): the
+                   committed default table covers every case here
 
 ``kernels/runtime.py`` (execute_plan), ``core/codegen.py`` (all four
 backends), ``benchmarks/bench_recurrences.py`` and the parity tests are
@@ -116,6 +119,14 @@ def registered_names() -> tuple[str, ...]:
 
 def specs() -> tuple[KernelSpec, ...]:
     return tuple(_REGISTRY[n] for n in registered_names())
+
+
+def autotune_cases(spec: KernelSpec) -> tuple[tuple[str, tuple[int, ...]], ...]:
+    """The (dtype, builder-args) cases a crossover table must cover for
+    ``spec``: the smoke case (what ``benchmarks/run.py --ci`` plans) plus
+    every bench case (the paper-scale Table III sizes) — bench sizes
+    double as autotune keys."""
+    return ((spec.parity_dtypes[0], spec.smoke_args), *spec.bench_cases)
 
 
 # ---------------------------------------------------------------------------

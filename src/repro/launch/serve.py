@@ -46,15 +46,22 @@ def main():
 
     from repro.kernels import planned_report
     from repro.kernels.planned import planned_enabled
-    rows = [(site, st["planned"], st["fallback"])
+    rows = [(site, st["planned"], st["fallback"], st["backends"],
+             st["autotune"])
             for site, st in planned_report().items()
             if "/bwd_" not in site]
-    print("planned GEMM call sites (site: planned/fallback traces):")
-    for site, n_planned, n_fallback in rows:
-        print(f"  {site}: {n_planned}/{n_fallback}")
+    print("planned GEMM call sites (site: planned/fallback traces, "
+          "executed backends, autotune table hit/miss):")
+    for site, n_planned, n_fallback, backends, tune in rows:
+        mix = ",".join(f"{b}={n}" for b, n in sorted(backends.items()))
+        print(f"  {site}: {n_planned}/{n_fallback}  [{mix or '-'}]  "
+              f"tune {tune['hit']}/{tune['miss']}")
+    print(f"autotune (load-time delta): {eng.autotune_report}")
     if planned_enabled():
-        assert any(n for _, n, _ in rows), \
+        assert any(n for _, n, _, _, _ in rows), \
             "serving executed no planned GEMMs"
+        assert eng.autotune_report.get("measure_calls", 0) == 0, \
+            "serve-time planning must not measure"
 
 
 if __name__ == "__main__":

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import autotune
 from repro.kernels import planned
 from repro.models import build_model
 
@@ -45,8 +46,10 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, *, max_slots: int = 4,
-                 max_seq: int = 512, prompt_len: int | None = None):
+                 max_seq: int = 512, prompt_len: int | None = None,
+                 policy: autotune.PlanPolicy | None = None):
         self.cfg = cfg
+        self.policy = policy
         self.api = build_model(cfg)
         self.max_slots = max_slots
         self.max_seq = max_seq
@@ -61,6 +64,7 @@ class ServeEngine:
             lambda p, c, t: self.api.decode(p, c, t))
         self._decode_exec = None
         self.plan_report: dict = {}
+        self.autotune_report: dict = {}
 
     def load(self, params):
         """Install weights and plan + compile the serving GEMMs up front.
@@ -72,7 +76,15 @@ class ServeEngine:
         If ``prompt_len`` was given, the prefill GEMM shapes are planned
         ahead as well (abstract trace, no FLOPs).  ``plan_report`` keeps
         only the decisions *this warmup* made (a delta against the
-        process-global report, so earlier unrelated traces don't leak in).
+        process-global report, so earlier unrelated traces don't leak in),
+        and ``autotune_report`` the crossover-table traffic of the same
+        window: table hits/misses and — the invariant the tests pin —
+        ``measure_calls == 0``, because serve-time planning only *reads*
+        the committed table, it never races backends.
+
+        If the engine was constructed with a ``PlanPolicy``, the warmup
+        trace runs under it (``planned.override``); otherwise whatever
+        ``planned.configure`` set up (default: ``mode="cached"``) applies.
         """
         self.params = params
         self.cache = self.api.init_cache(self.max_slots, self.max_seq)
@@ -80,13 +92,15 @@ class ServeEngine:
             site: (st["planned"], st["fallback"])
             for site, st in planned.planned_report().items()
         }
-        tokens0 = jnp.zeros((self.max_slots, 1), jnp.int32)
-        self._decode_exec = self._decode_jit.lower(
-            params, self.cache, tokens0).compile()
-        if self.prompt_len:
-            jax.eval_shape(
-                lambda p, b: self.api.prefill(p, b, self.max_seq),
-                params, self._prefill_spec())
+        tune0 = autotune.counters()
+        with planned.override(policy=self.policy):
+            tokens0 = jnp.zeros((self.max_slots, 1), jnp.int32)
+            self._decode_exec = self._decode_jit.lower(
+                params, self.cache, tokens0).compile()
+            if self.prompt_len:
+                jax.eval_shape(
+                    lambda p, b: self.api.prefill(p, b, self.max_seq),
+                    params, self._prefill_spec())
         delta = {}
         for site, st in planned.planned_report().items():
             done_planned, done_fallback = before.get(site, (0, 0))
@@ -96,6 +110,8 @@ class ServeEngine:
                 delta[site] = dict(
                     st, planned=d_planned, fallback=d_fallback)
         self.plan_report = delta
+        tune1 = autotune.counters()
+        self.autotune_report = {k: tune1[k] - tune0[k] for k in tune1}
 
     def _prefill_spec(self):
         """Abstract prefill batch for plan warmup — family-aware and

@@ -1,0 +1,240 @@
+"""Crossover-table contract (core/autotune.py).
+
+Pins the four load-bearing properties of the measured-autotuning
+surface:
+
+* **Key determinism** — table keys are pure string assembly from the
+  frozen IR, byte-identical across processes (no ``hash()``).
+* **Rejection** — corrupt / version-mismatched / stale tables raise
+  ``TableError`` from ``load_table`` and degrade to the *modelled*
+  choice inside ``best_plan`` (planning never fails on a bad table).
+* **The acceptance criterion** — under ``PlanPolicy(mode="cached")``
+  and the committed default table, ``best_plan`` returns a measured
+  winner for every registered spec's smoke + bench shapes (both keyed
+  meshes) without timing anything at call time.
+* **Measured-mode roundtrip** — a race persists its winner, and the
+  reloaded table serves it back under ``cached`` with zero additional
+  measurement.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core import PlanPolicy, Target, best_plan
+from repro.core import autotune
+from repro.kernels import registry
+
+ROOT = Path(__file__).resolve().parent.parent
+SINGLE = Target(name="single_chip", mesh_shape=(1, 1))
+
+
+def _smoke_rec(name="mm", dtype="float32"):
+    spec = registry.get(name)
+    return spec.builder(*spec.smoke_args, dtype)
+
+
+# ---------------------------------------------------------------------------
+# key schema
+# ---------------------------------------------------------------------------
+
+def test_key_format_is_pinned():
+    rec = _smoke_rec("mm")
+    key = autotune.autotune_key(rec, (1, 1))
+    name, dtype, extents, mesh = key.split("|")
+    assert name == "mm" and dtype == "float32" and mesh == "mesh1x1"
+    assert extents == "x".join(str(e) for e in rec.extents)
+
+
+def test_key_is_deterministic_across_processes():
+    code = (
+        "import sys; sys.path.insert(0, 'src')\n"
+        "from repro.core import autotune\n"
+        "from repro.kernels import registry\n"
+        "spec = registry.get('jacobi2d')\n"
+        "rec = spec.builder(*spec.smoke_args, 'float32')\n"
+        "print(autotune.autotune_key(rec, (1, 8)))\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        cwd=ROOT, env={**os.environ, "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr[-500:]
+    local = autotune.autotune_key(_smoke_rec("jacobi2d"), (1, 8))
+    assert proc.stdout.strip().splitlines()[-1] == local
+
+
+def test_request_key_maps_builder_args_to_ir_extents():
+    spec = registry.get("jacobi2d")
+    req = autotune.PlanRequest(
+        kind="jacobi2d", shape=tuple(spec.smoke_args), dtype="float32",
+        target=Target(name="t", mesh_shape=(1, 8)))
+    assert autotune.request_key(req) == autotune.autotune_key(
+        _smoke_rec("jacobi2d"), (1, 8))
+
+
+# ---------------------------------------------------------------------------
+# table validation / rejection -> modelled fallback
+# ---------------------------------------------------------------------------
+
+def _entry(backend="pallas", us=None):
+    return {"backend": backend,
+            "us": us if us is not None else {backend: 10.0}}
+
+
+@pytest.mark.parametrize("payload", [
+    "{not json",
+    json.dumps([1, 2, 3]),
+    json.dumps({"schema": 99, "entries": {}}),              # version skew
+    json.dumps({"schema": autotune.TABLE_SCHEMA}),          # no entries
+    json.dumps({"schema": autotune.TABLE_SCHEMA,
+                "entries": {"k": _entry(backend="vitis")}}),  # stale backend
+    json.dumps({"schema": autotune.TABLE_SCHEMA,
+                "entries": {"k": {"backend": "pallas",
+                                  "us": {"pallas": -1}}}}),  # bad timing
+])
+def test_bad_tables_raise_table_error(tmp_path, payload):
+    path = tmp_path / "table.json"
+    path.write_text(payload, encoding="utf-8")
+    with pytest.raises(autotune.TableError):
+        autotune.load_table(path)
+
+
+def test_missing_table_raises_table_error(tmp_path):
+    with pytest.raises(autotune.TableError):
+        autotune.load_table(tmp_path / "nope.json")
+
+
+def test_bad_table_falls_back_to_modelled_plan(tmp_path):
+    path = tmp_path / "corrupt.json"
+    path.write_text("{not json", encoding="utf-8")
+    errors_before = autotune.counters()["table_errors"]
+    plan = best_plan(_smoke_rec("mm"), SINGLE,
+                     policy=PlanPolicy(mode="cached", table_path=str(path)))
+    assert plan.provenance == "modelled" and plan.backend == "pallas"
+    assert autotune.counters()["table_errors"] == errors_before + 1
+
+
+def test_rewritten_table_is_picked_up_by_mtime(tmp_path):
+    path = tmp_path / "t.json"
+    table = autotune.new_table("v1")
+    key = autotune.autotune_key(_smoke_rec("mm"), (1, 1))
+    table["entries"][key] = _entry("xla", {"xla": 5.0, "pallas": 9.0})
+    autotune.save_table(path, table)
+    assert autotune.load_table(path)["entries"][key]["backend"] == "xla"
+    table["entries"][key] = _entry("pallas", {"xla": 9.0, "pallas": 5.0})
+    autotune.save_table(path, table)
+    os.utime(path, ns=(path.stat().st_atime_ns,
+                       path.stat().st_mtime_ns + 1))
+    assert autotune.load_table(path)["entries"][key]["backend"] == "pallas"
+
+
+def test_winner_clamped_to_runnable_backends(tmp_path):
+    """A table measured on a big host must not dispatch this process to
+    a mesh it cannot build: the stored timings pick the best *runnable*
+    backend instead."""
+    big = Target(name="chip_64x64", mesh_shape=(64, 64))
+    rec = _smoke_rec("mm")
+    assert "systolic" not in autotune.available_backends(big)
+    path = tmp_path / "t.json"
+    table = autotune.new_table()
+    table["entries"][autotune.autotune_key(rec, big.mesh_shape)] = _entry(
+        "systolic", {"systolic": 1.0, "xla": 3.0, "pallas": 7.0})
+    autotune.save_table(path, table)
+    plan = best_plan(rec, big,
+                     policy=PlanPolicy(mode="cached", table_path=str(path)))
+    assert plan.provenance == "measured"
+    assert plan.backend == "xla"  # best of what this host can run
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: committed table serves everything, no timing
+# ---------------------------------------------------------------------------
+
+def test_committed_table_serves_every_bench_shape_without_timing():
+    policy = PlanPolicy(mode="cached")
+    before = autotune.counters()["measure_calls"]
+    served = 0
+    for spec in registry.specs():
+        for dtype, args in registry.autotune_cases(spec):
+            for mesh in ((1, 1), (1, 8)):
+                rec = spec.builder(*args, dtype)
+                plan = best_plan(rec, Target(name="t", mesh_shape=mesh),
+                                 policy=policy)
+                assert plan.provenance == "measured", (
+                    f"{spec.name} {dtype} {args} mesh{mesh}: not in the "
+                    "committed table — regenerate with "
+                    "tools/gen_autotune.py")
+                assert plan.backend in autotune.BACKENDS
+                served += 1
+    assert autotune.counters()["measure_calls"] == before
+    # one entry per (spec, smoke+bench case, mesh)
+    assert served == len(autotune.load_table(
+        autotune.DEFAULT_TABLE_PATH)["entries"])
+
+
+def test_committed_table_entries_record_their_proxy():
+    table = autotune.load_table(autotune.DEFAULT_TABLE_PATH)
+    for key, entry in table["entries"].items():
+        assert entry["backend"] in entry["us"], key
+        assert "measured_shape" in entry and "measured_dtype" in entry, key
+
+
+def test_modelled_policy_never_touches_the_table():
+    before = autotune.counters()
+    plan = best_plan(_smoke_rec("mm"), SINGLE,
+                     policy=PlanPolicy(mode="modelled"))
+    assert plan.provenance == "modelled"
+    after = autotune.counters()
+    assert (after["hits"], after["misses"]) == (
+        before["hits"], before["misses"])
+
+
+# ---------------------------------------------------------------------------
+# measured mode: race -> persist -> cached roundtrip
+# ---------------------------------------------------------------------------
+
+def test_measured_roundtrip_persists_and_serves(tmp_path):
+    path = tmp_path / "t.json"
+    rec = _smoke_rec("mttkrp")
+    measured = PlanPolicy(mode="measured", table_path=str(path),
+                          reps=1, warmup=1)
+    first = best_plan(rec, SINGLE, policy=measured)
+    assert first.provenance == "measured"
+    table = autotune.load_table(path)
+    key = autotune.autotune_key(rec, SINGLE.mesh_shape)
+    assert table["entries"][key]["backend"] == first.backend
+    assert table["suite_median_us"] > 0
+    calls = autotune.counters()["measure_calls"]
+    again = best_plan(rec, SINGLE,
+                      policy=PlanPolicy(mode="cached", table_path=str(path)))
+    assert again.backend == first.backend
+    assert autotune.counters()["measure_calls"] == calls
+
+
+def test_cached_miss_does_not_measure(tmp_path):
+    path = tmp_path / "empty.json"
+    autotune.save_table(path, autotune.new_table())
+    counters = autotune.counters()
+    plan = best_plan(_smoke_rec("fir"), SINGLE,
+                     policy=PlanPolicy(mode="cached", table_path=str(path)))
+    assert plan.provenance == "modelled"
+    after = autotune.counters()
+    assert after["measure_calls"] == counters["measure_calls"]
+    assert after["misses"] == counters["misses"] + 1
+
+
+def test_machine_factor_normalizes_by_suite_median():
+    table = autotune.new_table()
+    table["entries"] = {
+        "a": _entry("pallas", {"pallas": 10.0}),
+        "b": _entry("xla", {"xla": 100.0}),
+        "c": _entry("pallas", {"pallas": 40.0}),
+    }
+    # local machine is uniformly 2x slower -> factor 2, regardless of key
+    fresh = {"a": 20.0, "b": 200.0, "c": 80.0, "unshared": 1.0}
+    assert autotune.machine_factor(table, fresh) == pytest.approx(2.0)
+    assert autotune.machine_factor(table, {"unshared": 1.0}) == 1.0

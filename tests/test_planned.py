@@ -7,11 +7,14 @@ path match XLA's; (c) model forward/decode passes actually execute their
 GEMMs through mapper plans (``planned_report`` routing assertions).
 """
 
+import warnings
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.core.autotune import PlanPolicy
 from repro.kernels import planned, ref
 from repro.kernels.planned import (
     PLANNED_ENV,
@@ -281,3 +284,84 @@ def test_report_clear():
 
 def test_supported_dtypes_cover_parity_sweep():
     assert set(DTYPES) <= set(planned.SUPPORTED_DTYPES)
+
+
+# ---------------------------------------------------------------------------
+# configuration surface: configure / override / deprecated env alias
+# ---------------------------------------------------------------------------
+
+def test_configure_disables_planning():
+    x, w = _draw((8, 16), "float32"), _draw((16, 8), "float32")
+    try:
+        cfg = planned.configure(enabled=False)
+        assert cfg.enabled is False
+        planned_report_clear()
+        out = planned.planned_dense(x, w, site="t.cfg")
+        rep = planned_report()["t.cfg"]
+        assert rep["fallback"] == 1 and rep["reasons"] == {"disabled": 1}
+        _assert_matches(out, ref.matmul(x, w), "float32")
+    finally:
+        planned.reset_configuration()
+
+
+def test_configure_merges_unspecified_fields():
+    try:
+        planned.configure(policy=PlanPolicy(mode="modelled"))
+        cfg = planned.configure(enabled=False)  # policy must survive
+        assert cfg.policy.mode == "modelled" and cfg.enabled is False
+    finally:
+        planned.reset_configuration()
+
+
+def test_override_restores_previous_config():
+    planned.reset_configuration()
+    with planned.override(enabled=False) as cfg:
+        assert cfg.enabled is False
+        assert not planned.planned_enabled()
+    assert planned.planned_enabled()
+    assert planned.current_config() == planned.PlannedConfig()
+
+
+def test_configure_wins_over_env_alias(monkeypatch):
+    monkeypatch.setenv(PLANNED_ENV, "off")
+    try:
+        planned.configure(enabled=True)
+        assert planned.planned_enabled()
+    finally:
+        planned.reset_configuration()
+    assert not planned.planned_enabled()  # alias applies again
+
+
+def test_env_alias_warns_deprecation_once(monkeypatch):
+    monkeypatch.setenv(PLANNED_ENV, "off")
+    monkeypatch.setattr(planned, "_ENV_WARNED", False)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        planned.current_config()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        planned.current_config()  # second read stays silent
+
+
+def test_default_policy_is_cached():
+    planned.reset_configuration()
+    pol = planned.current_policy()
+    assert pol.mode == "cached" and pol.table_path is None
+
+
+def test_report_exposes_backend_and_autotune_counters():
+    x, w = _draw((16, 32), "float32"), _draw((32, 16), "float32")
+    planned_report_clear()
+    planned.planned_dense(x, w, site="t.backend")
+    rep = planned_report()["t.backend"]
+    assert sum(rep["backends"].values()) == 1
+    assert rep["autotune"]["hit"] + rep["autotune"]["miss"] == 1
+
+
+def test_modelled_policy_reports_autotune_miss():
+    x, w = _draw((16, 32), "float32"), _draw((32, 16), "float32")
+    planned_report_clear()
+    with planned.override(policy=PlanPolicy(mode="modelled")):
+        planned.planned_dense(x, w, site="t.modelled")
+    rep = planned_report()["t.modelled"]
+    assert rep["autotune"] == {"hit": 0, "miss": 1}
+    assert rep["backends"] == {"pallas": 1}

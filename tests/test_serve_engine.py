@@ -173,6 +173,36 @@ def test_steady_state_steps_do_not_grow_plan_cache():
     assert plan_cache_info().misses == misses
 
 
+def test_load_performs_no_measurement():
+    """The serving acceptance pin: load() under the default cached
+    policy reads the committed crossover table and *never* races
+    backends — and steady-state traffic doesn't either."""
+    from repro.core import autotune
+
+    cfg, eng = _engine(max_slots=2)
+    assert eng.autotune_report["measure_calls"] == 0, eng.autotune_report
+    before = autotune.counters()["measure_calls"]
+    for p in _prompts(cfg, 2):
+        eng.submit(p, max_new_tokens=3)
+    eng.run_until_drained()
+    assert autotune.counters()["measure_calls"] == before
+
+
+def test_engine_accepts_explicit_policy():
+    """A modelled-policy engine serves identically, with the table
+    never consulted during its warmup."""
+    from repro.core.autotune import PlanPolicy
+
+    cfg, eng = _engine(max_slots=2,
+                       policy=PlanPolicy(mode="modelled"))
+    assert eng.autotune_report["measure_calls"] == 0
+    assert eng.autotune_report["hits"] == 0
+    for p in _prompts(cfg, 2):
+        eng.submit(p, max_new_tokens=3)
+    done = eng.run_until_drained()
+    assert len(done) == 2 and all(len(r.output) == 3 for r in done)
+
+
 # ---------------------------------------------------------------------------
 # _write_lane dtype guard
 # ---------------------------------------------------------------------------

@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Autotune smoke for the CI bench-gate job.
+
+Three assertions, each cheap enough for every push:
+
+1. **Measure + roundtrip**: race two small shapes (``mm`` and
+   ``jacobi2d`` smoke sizes) under ``PlanPolicy(mode="measured")`` into
+   a scratch table, reload it, and require the reloaded table to serve
+   both keys under ``mode="cached"`` with zero additional measurement.
+2. **Committed default table**: every registered spec's smoke shape —
+   the exact requests ``benchmarks/run.py --ci`` plans — must hit the
+   committed table (``best_plan`` returns a measured winner without
+   timing anything), proving the ``--ci`` timings consult it.
+3. **Rejection path**: a corrupt table must fall back to the modelled
+   choice cleanly (no exception, miss counted).
+
+    PYTHONPATH=src python tools/autotune_smoke.py
+"""
+
+from __future__ import annotations
+
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def main() -> int:
+    from repro.core import Target, best_plan
+    from repro.core import autotune
+    from repro.kernels import registry
+
+    target = Target(name="single_chip", mesh_shape=(1, 1))
+
+    # 1. measure two small shapes, write, reload, serve from cache
+    with tempfile.TemporaryDirectory() as td:
+        path = str(Path(td) / "autotune_smoke.json")
+        measured = autotune.PlanPolicy(mode="measured", table_path=path,
+                                       reps=2, warmup=1)
+        cached = autotune.PlanPolicy(mode="cached", table_path=path)
+        plans = {}
+        for name in ("mm", "jacobi2d"):
+            spec = registry.get(name)
+            rec = spec.builder(*spec.smoke_args, spec.parity_dtypes[0])
+            plans[name] = best_plan(rec, target, policy=measured)
+            assert plans[name].provenance == "measured", plans[name]
+        table = autotune.load_table(path)
+        assert len(table["entries"]) == 2, sorted(table["entries"])
+        before = autotune.counters()["measure_calls"]
+        for name, first in plans.items():
+            spec = registry.get(name)
+            rec = spec.builder(*spec.smoke_args, spec.parity_dtypes[0])
+            again = best_plan(rec, target, policy=cached)
+            assert again.provenance == "measured"
+            assert again.backend == first.backend, (name, again.backend)
+        assert autotune.counters()["measure_calls"] == before, \
+            "cached mode must not measure"
+        print(f"autotune-smoke: measured->persisted->cached roundtrip OK "
+              f"({sorted(table['entries'])})")
+
+    # 2. the committed default table serves every spec's --ci request
+    ci_policy = autotune.PlanPolicy(mode="cached")
+    before = autotune.counters()["measure_calls"]
+    for spec in registry.specs():
+        rec = spec.builder(*spec.smoke_args, spec.parity_dtypes[0])
+        plan = best_plan(rec, target, policy=ci_policy)
+        assert plan.provenance == "measured", (
+            f"{spec.name}: smoke shape missing from the committed default "
+            "table — regenerate with tools/gen_autotune.py")
+    assert autotune.counters()["measure_calls"] == before
+    print(f"autotune-smoke: committed table covers all "
+          f"{len(registry.specs())} specs' --ci requests, 0 measurements")
+
+    # 3. corrupt table -> clean modelled fallback
+    with tempfile.TemporaryDirectory() as td:
+        bad = Path(td) / "corrupt.json"
+        bad.write_text("{not json", encoding="utf-8")
+        spec = registry.get("mm")
+        rec = spec.builder(*spec.smoke_args, "float32")
+        plan = best_plan(rec, target, policy=autotune.PlanPolicy(
+            mode="cached", table_path=str(bad)))
+        assert plan.provenance == "modelled" and plan.backend == "pallas"
+    print("autotune-smoke: corrupt table rejected with modelled fallback")
+    print("autotune-smoke: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,6 +15,10 @@ Three checks, so the docs cannot silently rot as the code grows:
    ``systolic_lowering`` hook must also appear in docs/systolic.md (the
    schedule-family guide) — a new hooked workload has to document which
    schedule family serves it.
+4. **Autotune coverage**: docs/autotune.md must exist and document every
+   ``PlanPolicy`` mode plus the committed ``default_autotune.json``
+   table, and docs/architecture.md must describe ``PlanPolicy`` —
+   the planning-policy surface cannot change undocumented.
 
     python tools/check_docs.py          # exits non-zero on any failure
 """
@@ -30,6 +34,8 @@ ROOT = Path(__file__).resolve().parent.parent
 DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
 ARCHITECTURE = ROOT / "docs" / "architecture.md"
 SYSTOLIC_DOC = ROOT / "docs" / "systolic.md"
+AUTOTUNE_DOC = ROOT / "docs" / "autotune.md"
+PLAN_MODES = ("modelled", "cached", "measured")
 
 # [text](target) — excluding images handled the same way is fine too
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
@@ -151,11 +157,34 @@ def check_systolic_coverage(hooked: list[str]) -> list[str]:
     ]
 
 
+def check_autotune_docs() -> list[str]:
+    if not AUTOTUNE_DOC.exists():
+        return ["docs/autotune.md missing (autotune coverage check)"]
+    errors = []
+    text = AUTOTUNE_DOC.read_text(encoding="utf-8")
+    for mode in PLAN_MODES:
+        if f"`{mode}`" not in text:
+            errors.append(
+                f"docs/autotune.md: PlanPolicy mode {mode!r} is not "
+                "documented")
+    if "default_autotune.json" not in text:
+        errors.append(
+            "docs/autotune.md: the committed default_autotune.json table "
+            "is not documented")
+    if ARCHITECTURE.exists():
+        arch = ARCHITECTURE.read_text(encoding="utf-8")
+        if "PlanPolicy" not in arch:
+            errors.append(
+                "docs/architecture.md: PlanPolicy (the planning-policy "
+                "surface) is not documented")
+    return errors
+
+
 def main() -> int:
     names = registered_names()
     hooked = systolic_hooked_names()
     errors = (check_links() + check_registry_coverage(names)
-              + check_systolic_coverage(hooked))
+              + check_systolic_coverage(hooked) + check_autotune_docs())
     for e in errors:
         print(f"FAIL {e}")
     n_links = sum(

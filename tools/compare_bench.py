@@ -1,20 +1,23 @@
 #!/usr/bin/env python
 """Bench-regression gate: compare a fresh ``benchmarks/run.py --ci`` JSON
-against the committed baseline (``benchmarks/BENCH_PR5.json``).
+against the committed baseline (``benchmarks/BENCH_PR6.json``).
 
 Timings from different machines are not comparable raw, so the gate is
 *machine-normalized*: it computes the per-spec ratio new/baseline, takes
 the median ratio as the machine-speed factor, and fails only when one
 spec's ratio exceeds ``--tolerance`` (default 2.0) times that median —
 i.e. when a spec got >2x slower *relative to the rest of the suite*.
-Plan-cache counters are deterministic, so they compare exactly:
+Plan-cache and autotune counters are deterministic, so they compare
+exactly:
 
   * a spec present in the baseline but missing from the fresh run fails
     (a spec was dropped from the registry or stopped benching);
   * ``plan_cache_misses`` may not increase (the spec started re-planning);
-  * ``replan_hits`` must stay >= 1 (the LRU plan-cache contract).
+  * ``replan_hits`` must stay >= 1 (the LRU plan-cache contract);
+  * ``autotune_hit`` may not flip true -> false (the spec lost its row in
+    the committed crossover table and silently fell back to modelled).
 
-    python tools/compare_bench.py benchmarks/BENCH_PR5.json BENCH_NEW.json
+    python tools/compare_bench.py benchmarks/BENCH_PR6.json BENCH_NEW.json
 
 Exit code 0 = within tolerance, 1 = regression.  Dependency-free.
 """
@@ -58,6 +61,11 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
             errors.append(
                 f"{name}: re-planning the same recurrence missed the LRU "
                 "plan cache")
+        if b.get("autotune_hit", False) and not n.get("autotune_hit", False):
+            errors.append(
+                f"{name}: autotune table hit became a miss — the spec "
+                "lost its committed crossover-table coverage (regenerate "
+                "with tools/gen_autotune.py)")
         if b.get("us_per_call", 0) > 0:
             ratios[name] = n["us_per_call"] / b["us_per_call"]
 
@@ -81,7 +89,7 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("baseline", help="committed BENCH_PR5.json")
+    ap.add_argument("baseline", help="committed BENCH_PR6.json")
     ap.add_argument("fresh", help="fresh run.py --ci output")
     ap.add_argument("--tolerance", type=float, default=2.0,
                     help="allowed per-spec slowdown relative to the "

@@ -1,0 +1,60 @@
+#!/usr/bin/env python
+"""Regenerate the committed default autotune crossover table.
+
+Races every registered spec's backend lowerings (warmup + median-of-k,
+see ``core/autotune.py``) at its smoke proxy shape and writes one entry
+per (spec, smoke+bench shape, dtype, mesh) key to
+``src/repro/core/default_autotune.json`` — the table ``best_plan``
+consults under ``PlanPolicy(mode="cached")`` so cold-start serving gets
+measured winners with zero measurement at serve time.
+
+Run it on the hardware you serve on; the committed table was generated
+on a CPU host (interpret-mode Pallas), where XLA wins — on a real TPU
+the crossovers move, which is the whole point of measuring.
+
+    PYTHONPATH=src python tools/gen_autotune.py \
+        [--out src/repro/core/default_autotune.json] [--reps 3]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def main() -> int:
+    from repro.core import autotune
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(autotune.DEFAULT_TABLE_PATH),
+                    help="table path (default: the committed table)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timed calls per backend (median is recorded)")
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--mesh", action="append", default=None,
+                    help="mesh RxC to key entries under (repeatable; "
+                         "default: 1x1 and 1x8)")
+    args = ap.parse_args()
+
+    meshes = (tuple(tuple(int(d) for d in m.split("x"))
+                    for m in args.mesh)
+              if args.mesh else ((1, 1), (1, 8)))
+    policy = autotune.PlanPolicy(mode="measured", reps=args.reps,
+                                 warmup=args.warmup)
+    print(f"gen_autotune: racing backends for meshes {meshes} ...")
+    table = autotune.build_default_table(meshes=meshes, policy=policy)
+    autotune.save_table(args.out, table)
+    n = len(table["entries"])
+    winners: dict[str, int] = {}
+    for e in table["entries"].values():
+        winners[e["backend"]] = winners.get(e["backend"], 0) + 1
+    print(f"gen_autotune: wrote {args.out} ({n} entries; winners: "
+          f"{winners})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
