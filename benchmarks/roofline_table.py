@@ -1,6 +1,7 @@
 """Roofline tables: registry-driven structural bounds + dry-run artifacts.
 
-Two sections (both emitted by ``run``, the ``--only roofline`` driver hook):
+Three sections (all emitted by ``run``, the ``--only roofline`` driver
+hook):
 
 1. **Registry bounds** (``registry_rows``): one ``predict_bounds`` row per
    bench case of *every registered KernelSpec* — the case list IS the
@@ -9,7 +10,15 @@ Two sections (both emitted by ``run``, the ``--only roofline`` driver hook):
    "registry-driven roofline" item).  Columns are documented in
    ``docs/architecture.md`` §Roofline-table columns.
 
-2. **Dry-run table** (``load``/``dryrun_rows``): the EXPERIMENTS.md
+2. **Fused-chain bytes** (``chain_rows``): one row per fused
+   producer→consumer chain case (the same cases the ``--ci`` bench gate
+   times), comparing predicted HBM bytes of the single fused launch
+   against two standalone stage launches.  The delta is exactly
+   ``FusedPlan.predicted_bytes_saved`` — the intermediate's write+read
+   at the accumulate dtype, the bytes the fusion keeps shard-resident
+   (see ``docs/fusion.md``).
+
+3. **Dry-run table** (``load``/``dryrun_rows``): the EXPERIMENTS.md
    §Roofline table built from ``results/dryrun/*.json`` artifacts written
    by ``repro.launch.dryrun`` (compiled-HLO rooflines of the model stack,
    not structural predictions).
@@ -96,7 +105,103 @@ def run_registry(csv_rows: list | None = None,
 
 
 # ---------------------------------------------------------------------------
-# section 2: dry-run artifact table (EXPERIMENTS.md §Roofline)
+# section 2: fused-chain HBM bytes (predicted, vs standalone launches)
+# ---------------------------------------------------------------------------
+
+#: Chain cases mirror ``benchmarks/run.py`` ``CI_CHAIN_CASES`` so the
+#: structural prediction here and the timed gate rows describe the same
+#: executions.
+CHAIN_CASES = (
+    ("conv2d+jacobi2d", ((64, 61, 4, 4), (62, 59)), "int16", None),
+    ("mm+mm", ((24, 128, 64), (24, 64, 128)), "float32", ("bias_gelu",)),
+)
+
+
+def chain_rows(target: Target | None = None) -> list[dict]:
+    """Predicted HBM bytes: one fused launch vs standalone stage launches.
+
+    The fused launch reads the chain operands and writes the final
+    output once; the unfused path additionally writes *and* re-reads the
+    intermediate at the accumulate dtype — by construction that delta is
+    ``FusedPlan.predicted_bytes_saved``, so the two columns are derived
+    from one structural number plus the operand/output footprints
+    (``jax.eval_shape``: nothing executes).
+    """
+    import jax
+    import numpy as np
+
+    from repro.core import fusion
+
+    target = target or Target(name="single_chip", mesh_shape=(1, 1))
+    rng = np.random.default_rng(0)
+    rows: list[dict] = []
+    for kind, shapes, dtype, inter in CHAIN_CASES:
+        ch = fusion.chain_from_request(kind, shapes, dtype)
+        plan = fusion.try_fuse(ch, target, interstage=inter)
+        if plan is None:
+            rows.append({"chain": kind, "dtype": dtype, "fused": False})
+            continue
+        ops = fusion.chain_operands(ch, rng, interstage=inter)
+        out = jax.eval_shape(fusion.lower_fused(plan, backend="xla"), *ops)
+        leaves = out if isinstance(out, tuple) else (out,)
+        io_bytes = sum(int(o.size) * o.dtype.itemsize for o in ops)
+        io_bytes += sum(int(np.prod(leaf.shape)) *
+                        np.dtype(leaf.dtype).itemsize for leaf in leaves)
+        unfused = io_bytes + plan.predicted_bytes_saved
+        rows.append({
+            "chain": kind,
+            "dtype": dtype,
+            "fused": True,
+            "family": plan.family,
+            "stages": len(ch.stages),
+            "fused_bytes": io_bytes,
+            "unfused_bytes": unfused,
+            "bytes_saved": plan.predicted_bytes_saved,
+            "saved_pct": 100.0 * plan.predicted_bytes_saved / unfused,
+        })
+    return rows
+
+
+def format_chain_table(rows: list[dict]) -> str:
+    head = (f"| {'chain':16s} | {'dtype':7s} | {'family':7s} | st "
+            f"| {'fused B':>9s} | {'unfused B':>9s} | {'saved B':>8s} "
+            f"| {'saved':>6s} |")
+    sep = "|" + "|".join("-" * len(c) for c in head.split("|")[1:-1]) + "|"
+    out = [head, sep]
+    for r in rows:
+        if not r["fused"]:
+            out.append(f"| {r['chain']:16s} | {r['dtype']:7s} | "
+                       "DID NOT FUSE |")
+            continue
+        out.append(
+            f"| {r['chain']:16s} | {r['dtype']:7s} | {r['family']:7s} "
+            f"| {r['stages']:2d} | {r['fused_bytes']:9d} "
+            f"| {r['unfused_bytes']:9d} | {r['bytes_saved']:8d} "
+            f"| {r['saved_pct']:5.1f}% |")
+    return "\n".join(out)
+
+
+def run_chains(csv_rows: list | None = None,
+               target: Target | None = None) -> list[dict]:
+    rows = chain_rows(target)
+    print(f"\n== Fused-chain roofline: predicted HBM bytes, one fused "
+          f"launch vs standalone stage launches ({len(rows)} chains) ==")
+    print(format_chain_table(rows))
+    if csv_rows is not None:
+        for r in rows:
+            if not r["fused"]:
+                continue
+            csv_rows.append((
+                f"roofline_chain_{r['chain']}_{r['dtype']}",
+                0.0,
+                f"bytes_saved={r['bytes_saved']};"
+                f"saved_pct={r['saved_pct']:.1f};"
+                f"hbm_launches=1v{r['stages']}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# section 3: dry-run artifact table (EXPERIMENTS.md §Roofline)
 # ---------------------------------------------------------------------------
 
 def _rl_from_json(d: dict) -> RL.Roofline:
@@ -168,6 +273,7 @@ def run_dryrun(csv_rows: list | None = None,
 
 def run(csv_rows: list | None = None, results_dir: str = "results/dryrun"):
     run_registry(csv_rows)
+    run_chains(csv_rows)
     run_dryrun(csv_rows, results_dir)
 
 
@@ -176,9 +282,11 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--registry-only", action="store_true",
-                    help="only the registry-driven predict_bounds table")
+                    help="only the registry-driven predict_bounds + "
+                         "fused-chain tables (no dry-run artifacts)")
     args = ap.parse_args()
     if args.registry_only:
         run_registry()
+        run_chains()
     else:
         run()

@@ -6,13 +6,17 @@ Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
 
 ``--ci`` runs the bench-regression gate's measurement pass instead: one
 plan-driven smoke execution per registered spec (timing + plan-cache +
-autotune counters) written as JSON.  Planning consults the committed
-autotune crossover table under ``PlanPolicy(mode="cached")`` — each
-spec's row records which measured backend won and whether the table was
+autotune counters + HBM round-trip counts) written as JSON, plus one
+row per **fused chain** (conv2d→jacobi2d, the mm→mm MLP pair) timing
+the fused single-launch execution against the same stages as separate
+launches with the intermediate forced through HBM.  Planning consults
+the committed autotune crossover table under ``PlanPolicy(mode="cached")``
+— each row records which measured backend won and whether the table was
 hit — and execution dispatches to that winner.  CI compares the fresh
-file against the committed ``benchmarks/BENCH_PR6.json`` baseline with
+file against the committed ``benchmarks/BENCH_PR7.json`` baseline with
 ``tools/compare_bench.py`` (ratios are machine-normalized, so only real
->2x per-spec regressions fail the gate — see that tool's docstring).
+>2x per-spec regressions fail the gate; a fused chain case flipping
+back to unfused, or growing HBM round trips, fails deterministically).
 
     PYTHONPATH=src python benchmarks/run.py --ci --out BENCH_NEW.json
 """
@@ -45,7 +49,17 @@ def ci_bench(out_path: str) -> dict:
                                  started re-planning, a real regression);
       * ``replan_hits``        — extra hits when re-planning the same
                                  recurrence (must stay >= 1: the LRU cache
-                                 contract).
+                                 contract);
+      * ``hbm_round_trips``    — HBM materialization points per call (a
+                                 standalone launch flushes its output
+                                 once; deterministic, gated exactly).
+
+    The ``chains`` section runs each fused case twice per call shape:
+    ``fused`` (one launch, intermediate shard-/fusion-resident) and
+    ``unfused`` (one launch per stage, ``block_until_ready`` between, so
+    the intermediate round-trips HBM like two standalone plans).  The
+    fused path must be strictly cheaper in round trips (1 vs n_stages)
+    and, machine-normalized, in time.
     """
     import numpy as np
     import jax.numpy as jnp
@@ -93,24 +107,134 @@ def ci_bench(out_path: str) -> dict:
             "autotune_hit": plan.provenance == "measured",
             "plan_cache_misses": plan_cache_info().misses - misses_before,
             "replan_hits": plan_cache_info().hits - hits_before,
+            "hbm_round_trips": 1,  # one launch, one output flush
         }
         print(f"ci-bench {spec.name:13s} {dtype:8s} {us:10.1f} us  "
               f"backend={plan.backend}"
               f"[{'hit' if plan.provenance == 'measured' else 'miss'}] "
               f"misses={specs_out[spec.name]['plan_cache_misses']} "
               f"replan_hits={specs_out[spec.name]['replan_hits']}")
+    chains_out = _ci_bench_chains(target, policy, rng)
     payload = {
-        "schema": 2,
+        "schema": 3,
         "note": ("per-spec smoke timings (interpret mode, autotuned "
-                 "backend) + plan-cache/autotune counters; compare with "
+                 "backend) + plan-cache/autotune counters + HBM "
+                 "round-trip counts, plus fused-chain rows (fused vs "
+                 "unfused stage launches); compare with "
                  "tools/compare_bench.py, never raw across machines"),
         "specs": specs_out,
+        "chains": chains_out,
     }
     with open(out_path, "w", encoding="utf-8") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
-    print(f"ci-bench: wrote {out_path} ({len(specs_out)} specs)")
+    print(f"ci-bench: wrote {out_path} ({len(specs_out)} specs, "
+          f"{len(chains_out)} chains)")
     return payload
+
+
+#: Fused-chain gate cases: the worked stencil pair and the serving MLP
+#: up->down pair (the shape the committed table's chain keys record).
+CI_CHAIN_CASES = (
+    ("conv2d+jacobi2d", ((64, 61, 4, 4), (62, 59)), "int16", None),
+    ("mm+mm", ((24, 128, 64), (24, 64, 128)), "float32", ("bias_gelu",)),
+)
+
+
+def _ci_bench_chains(target, policy, rng) -> dict:
+    """Fused vs unfused timings for the registered chain cases.
+
+    ``fused``: ONE jitted launch for the whole chain (the plan's
+    table-measured composition backend).  ``unfused``: one jitted launch
+    per stage through each stage's own cached plan, with
+    ``block_until_ready`` between stages — the intermediate materializes
+    to HBM exactly as two standalone plans would.  HBM round trips are
+    counted at those materialization points (fused: 1, unfused:
+    n_stages), so the fused row must be *strictly* lower.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import best_plan
+    from repro.core import fusion
+    from repro.core.autotune import apply_policy
+    from repro.core.codegen import lower_plan
+
+    out: dict = {}
+    for kind, shapes, dtype, inter in CI_CHAIN_CASES:
+        ch = fusion.chain_from_request(kind, shapes, dtype)
+        plan = fusion.try_fuse(ch, target, interstage=inter)
+        row: dict = {"dtype": dtype, "fused": plan is not None}
+        if plan is not None:
+            plan = apply_policy(plan, policy)
+            avail = fusion.fused_available_backends(plan)
+            backend = plan.backend if plan.backend in avail else "xla"
+            row["backend"] = backend
+            row["autotune_hit"] = plan.provenance == "measured"
+            row["predicted_bytes_saved"] = plan.predicted_bytes_saved
+            ops = fusion.chain_operands(ch, rng, interstage=inter)
+            fused_fn = jax.jit(fusion.lower_fused(plan, backend=backend))
+            stage_ops, biases = fusion.split_operands(plan, ops)
+            # unfused: per-stage cached plans, one launch per stage
+            stage_fns = []
+            for i, st in enumerate(ch.stages):
+                sp = best_plan(st, target, policy=policy)
+                b = sp.backend if sp.backend in ("xla", "pallas") else "xla"
+                low = lower_plan(sp, backend=b)
+                if i == 0 or plan.interstage[i - 1] is None:
+                    stage_fns.append(jax.jit(low))
+                else:
+                    op = plan.interstage[i - 1]
+                    stage_fns.append(jax.jit(
+                        lambda mid, bias, *rest, _low=low, _op=op:
+                        _low(fusion.interstage_apply(_op, mid, bias),
+                             *rest)))
+
+            def block(x):
+                for leaf in x if isinstance(x, tuple) else (x,):
+                    jnp.asarray(leaf).block_until_ready()
+                return x
+
+            def unfused_call():
+                cur = block(stage_fns[0](*stage_ops[0]))
+                for b_i in range(len(ch.stages) - 1):
+                    nxt = stage_fns[b_i + 1]
+                    if plan.interstage[b_i] is None:
+                        cur = nxt(cur, *stage_ops[b_i + 1])
+                    else:
+                        cur = nxt(cur, biases[b_i], *stage_ops[b_i + 1])
+                    cur = block(cur)
+                return cur
+
+            block(fused_fn(*ops))  # compile outside the timed loop
+            unfused_call()
+            reps = 3
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                block(fused_fn(*ops))
+            fused_us = (time.perf_counter() - t0) / reps * 1e6
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                unfused_call()
+            unfused_us = (time.perf_counter() - t0) / reps * 1e6
+            row.update({
+                "fused_us": round(fused_us, 1),
+                "unfused_us": round(unfused_us, 1),
+                "speedup": round(unfused_us / fused_us, 3),
+                "hbm_round_trips": {"fused": 1,
+                                    "unfused": len(ch.stages)},
+            })
+            print(f"ci-bench chain {kind:18s} {dtype:8s} "
+                  f"fused={fused_us:8.1f}us unfused={unfused_us:8.1f}us "
+                  f"x{row['speedup']:.2f} backend={backend}"
+                  f"[{'hit' if row['autotune_hit'] else 'miss'}] "
+                  f"hbm 1 vs {len(ch.stages)}")
+        else:
+            print(f"ci-bench chain {kind:18s} {dtype:8s} DID NOT FUSE")
+        out[kind] = row
+    return out
 
 
 def main() -> None:
@@ -121,7 +245,7 @@ def main() -> None:
                          "smoke timings + plan-cache counters as JSON")
     ap.add_argument("--out", default="BENCH_NEW.json",
                     help="output path for --ci (pass "
-                         "benchmarks/BENCH_PR6.json explicitly when "
+                         "benchmarks/BENCH_PR7.json explicitly when "
                          "refreshing the committed baseline)")
     args = ap.parse_args()
     if args.ci:

@@ -76,6 +76,14 @@ def lower_plan(
     mesh=None,
     interpret: bool | None = None,
 ) -> Callable:
+    from . import fusion  # late: fusion imports mapper imports nothing here
+
+    if isinstance(plan, fusion.FusedPlan):
+        # fused chains dispatch through the consumer spec's
+        # fused_systolic_lowering hook / the single-launch composition
+        # (core/fusion.py) — same backend surface, chain semantics
+        return fusion.lower_fused(
+            plan, backend=backend, mesh=mesh, interpret=interpret)
     if backend == "xla":
         return _xla_fn(plan)
     if backend == "pallas":

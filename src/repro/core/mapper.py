@@ -304,7 +304,21 @@ def best_plan(rec: UniformRecurrence, target: Target = Target(),
     anything); "measured" additionally races the backends on a miss and
     persists the winner.  Every plan surface — ``kernels/planned.py``,
     ``serve/engine.py``, the benches — routes through here.
+
+    ``rec`` may also be a ``fusion.RecurrenceChain``: the chain runs the
+    fusion legality pass (``fusion.fuse``, raising ``FusionError`` on an
+    illegal chain) and returns a ``FusedPlan`` — policy handling is
+    identical, with chain-extended table keys (``name1+name2|...``).
     """
+    from . import fusion  # late: fusion imports this module
+
+    if isinstance(rec, fusion.RecurrenceChain):
+        plan = fusion.fuse(rec, target)
+        if policy is None or policy.mode == "modelled":
+            return plan
+        from . import autotune
+
+        return autotune.apply_policy(plan, policy)
     # top_k=1: a cache hit copies one plan, not the default five
     plans = map_recurrence(rec, target, top_k=1)
     if not plans:

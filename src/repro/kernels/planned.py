@@ -169,13 +169,23 @@ def current_policy() -> PlanPolicy:
 # plan lookup: every surface builds the same PlanRequest
 # ---------------------------------------------------------------------------
 
+def _norm_dim(d):
+    """One request dimension: an int, or (for fused chains) a nested
+    per-stage extent tuple."""
+    if isinstance(d, (tuple, list)):
+        return tuple(int(x) for x in d)
+    return int(d)
+
+
 def plan_request(kind: str, shape, dtype: str,
                  target: Target | None = None,
                  policy: PlanPolicy | None = None) -> PlanRequest:
-    """The one way a facade surface describes a plan lookup."""
+    """The one way a facade surface describes a plan lookup.  A ``+`` in
+    ``kind`` names a fused chain (``mm+mm``); its shape is then a tuple
+    of per-stage extent tuples."""
     return PlanRequest(
         kind=kind,
-        shape=tuple(int(d) for d in shape),
+        shape=tuple(_norm_dim(d) for d in shape),
         dtype=str(dtype),
         target=target or PLANNED_TARGET,
         policy=policy or current_policy(),
@@ -246,6 +256,23 @@ def planned_report_clear() -> None:
     _REPORT.clear()
 
 
+#: Every (kind, shape, dtype) the facade tried to plan this process —
+#: the serving-shape census tools/gen_autotune.py --serving traces
+#: (jax.eval_shape through the model stack, then reads this back).
+_OBSERVED: set[tuple] = set()
+
+
+def observed_requests() -> tuple[tuple, ...]:
+    """Sorted (kind, shape, dtype) triples the facade has planned (or
+    tried to) since the last ``observed_clear``.  Chain kinds carry
+    nested per-stage shape tuples."""
+    return tuple(sorted(_OBSERVED, key=repr))
+
+
+def observed_clear() -> None:
+    _OBSERVED.clear()
+
+
 # ---------------------------------------------------------------------------
 # decision + dispatch
 # ---------------------------------------------------------------------------
@@ -257,6 +284,7 @@ def _decide(kind: str, shape: tuple[int, ...], a_dtype, b_dtype):
     da, db = jnp.dtype(a_dtype).name, jnp.dtype(b_dtype).name
     if da != db or da not in SUPPORTED_DTYPES:
         return None, f"dtype:{da}x{db}"
+    _OBSERVED.add((kind, tuple(shape), da))
     plan = resolve(plan_request(kind, shape, da))
     if plan is None:
         return None, "infeasible"
@@ -396,3 +424,103 @@ def planned_bmm(a, b, *, site: str = "bmm", out_dtype=None):
     out = _dispatch_bmm(a.reshape(nb, m, k), b.reshape(nb, k, n), site,
                         out_dtype)
     return out.reshape(*batch, m, n)
+
+
+# -- fused MLP pair (mm+mm chain) -------------------------------------------
+
+#: Interstage activations the fused pair supports — matched to the
+#: ``bias_*`` forms in ``core.fusion.INTERSTAGE_OPS``.
+_ACT_FNS = {"relu": jax.nn.relu, "silu": jax.nn.silu, "gelu": jax.nn.gelu}
+
+
+def _pair_shape(m, k, ff, n):
+    """Nested mm+mm chain extents for x[m,k] @ wu[k,ff] -> @ wd[ff,n]."""
+    return ((m, ff, k), (m, n, ff))
+
+
+def _decide_pair(m, k, ff, n, dtypes, act: str):
+    """(FusedPlan, fallback_reason) for one up->down projection pair."""
+    if not planned_enabled():
+        return None, "disabled"
+    if act not in _ACT_FNS:
+        return None, f"act:{act}"
+    names = sorted({jnp.dtype(d).name for d in dtypes})
+    if len(names) != 1 or names[0] not in SUPPORTED_DTYPES:
+        return None, "dtype:" + "x".join(names)
+    shape = _pair_shape(m, k, ff, n)
+    _OBSERVED.add(("mm+mm", shape, names[0]))
+    plan = resolve(plan_request("mm+mm", shape, names[0]))
+    if plan is None:
+        return None, "infeasible"
+    return plan, None
+
+
+def _execute_pair(plan, act: str, x, wu, bu, wd):
+    from repro.core import fusion  # late: core.fusion pulls the registry
+
+    # the resolver fuses the bare chain; the boundary op is a call-site
+    # property, stamped here (operand layout follows: x, wu, bias, wd)
+    plan = dataclasses.replace(plan, interstage=("bias_" + act,))
+    backend = plan.backend if plan.backend in ("xla", "pallas") else "xla"
+    return fusion.lower_fused(plan, backend=backend)(x, wu, bu, wd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _mlp_pair_planned(site: str, act: str, x, wu, bu, wd):
+    m, k = x.shape
+    ff, n = wu.shape[1], wd.shape[1]
+    plan, _ = _decide_pair(
+        m, k, ff, n, (x.dtype, wu.dtype, bu.dtype, wd.dtype), act)
+    # as with _mm_planned: the caller only enters with a fused plan in
+    # hand; re-deriving it is a cache hit and keeps the primal closure-free
+    return _execute_pair(plan, act, x, wu, bu, wd)
+
+
+def _mlp_pair_planned_fwd(site, act, x, wu, bu, wd):
+    return _mlp_pair_planned(site, act, x, wu, bu, wd), (x, wu, bu, wd)
+
+
+def _mlp_pair_planned_bwd(site, act, res, g):
+    # recompute-in-backward: the fused forward never materialized the
+    # intermediate, so the backward re-derives h through planned GEMMs
+    x, wu, bu, wd = res
+    h_pre = _dispatch_mm(x, wu, site + "/bwd_up") + bu
+    h, act_vjp = jax.vjp(_ACT_FNS[act], h_pre)
+    dwd = _dispatch_mm(h.T.astype(g.dtype), g, site + "/bwd_dwd")
+    dh = _dispatch_mm(g, wd.T.astype(g.dtype), site + "/bwd_dh")
+    (dh_pre,) = act_vjp(dh.astype(h_pre.dtype))
+    dbu = dh_pre.sum(axis=0).astype(bu.dtype)
+    dwu = _dispatch_mm(x.T, dh_pre.astype(x.dtype), site + "/bwd_dwu")
+    dx = _dispatch_mm(dh_pre.astype(x.dtype), wu.T, site + "/bwd_dx")
+    return dx, dwu, dbu, dwd
+
+
+_mlp_pair_planned.defvjp(_mlp_pair_planned_fwd, _mlp_pair_planned_bwd)
+
+
+def planned_mlp_pair(x, wu, bu, wd, *, act: str = "gelu",
+                     site: str = "mlp.pair"):
+    """The transformer up->bias+activation->down projection pair routed
+    through the fusion pass as one ``mm+mm`` chain.
+
+    ``x``: [..., K]; ``wu``: [K, FF]; ``bu``: [FF]; ``wd``: [FF, N].
+    When the chain fuses (``core.fusion.fuse`` legality against the
+    facade target), both GEMMs run as a single launch with the
+    intermediate shard-resident — no HBM round trip between up and down
+    projections.  Otherwise falls back to the exact unfused semantics:
+    ``planned_dense(x, wu, site="mlp.up")`` + bias + activation, then
+    ``planned_dense(..., wd, site="mlp.down")``.
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    ff, n = wu.shape[-1], wd.shape[-1]
+    m = int(math.prod(lead)) if lead else 1
+    plan, reason = _decide_pair(
+        m, k, ff, n, (x.dtype, wu.dtype, bu.dtype, wd.dtype), act)
+    _record(site, _pair_shape(m, k, ff, n), plan=plan, reason=reason)
+    if plan is None:
+        act_fn = _ACT_FNS.get(act, jax.nn.gelu)
+        h = act_fn(planned_dense(x, wu, site="mlp.up") + bu)
+        return planned_dense(h, wd, site="mlp.down")
+    out = _mlp_pair_planned(site, act, x.reshape(m, k), wu, bu, wd)
+    return out.reshape(*lead, n)

@@ -25,6 +25,19 @@ of the mapper need:
                    same backend surface (``backend="allgather"``)
     supports_systolic (property)
                    True iff a ``systolic_lowering`` hook is registered
+    fusable_with   producer names this spec may *consume* in a fused
+                   chain (``core/fusion.py``): stage ``i``'s name must
+                   appear in stage ``i+1``'s ``fusable_with`` or the
+                   chain is rejected (spec-author contract:
+                   docs/fusion.md)
+    fused_systolic_lowering
+                   chain-level one-shard_map schedule hook,
+                   ``(fused_plan, mesh) -> Callable(*chain_operands)``
+                   — the ``fused_systolic`` backend dispatch target,
+                   looked up on the chain's *last* (consumer) spec
+    n_outputs      how many leading operands of a downstream consumer
+                   this spec's output covers in a chain (the two-plane
+                   complex fft stage feeds (re, im) = 2)
     parity_dtypes  dtypes the backend-parity suite sweeps
     atol           float comparison tolerance for parity (ints are exact)
     smoke_args     reduced builder sizes for smoke runs
@@ -85,6 +98,9 @@ class KernelSpec:
     operands: Callable[..., tuple]
     systolic_lowering: Callable[..., Callable] | None = None
     allgather_lowering: Callable[..., Callable] | None = None
+    fusable_with: tuple[str, ...] = ()
+    fused_systolic_lowering: Callable[..., Callable] | None = None
+    n_outputs: int = 1
     parity_dtypes: tuple[str, ...] = ("float32", "int8", "int16")
     atol: float = 1e-3
     smoke_args: tuple[int, ...] = ()
@@ -179,6 +195,8 @@ register(KernelSpec(
     operands=_mm_operands,
     systolic_lowering=chip.cannon_mm,
     allgather_lowering=chip.allgather_mm,
+    fusable_with=("mm",),
+    fused_systolic_lowering=chip.fused_cannon_mm,
     smoke_args=(256, 256, 256),
     bench_cases=(
         ("float32", (8192, 8192, 8192)),
@@ -209,6 +227,9 @@ register(KernelSpec(
     operands=_fft_operands,
     systolic_lowering=chip.cannon_fft2d,
     allgather_lowering=chip.allgather_fft2d,
+    fusable_with=("fft2d_stage",),
+    fused_systolic_lowering=chip.fused_cannon_fft2d,
+    n_outputs=2,
     smoke_args=(64, 64),
     bench_cases=(("cfloat", (8192, 8192)), ("cint16", (8192, 8192))),
 ))
@@ -239,6 +260,8 @@ register(KernelSpec(
     operands=_conv_operands,
     systolic_lowering=chip.chain_conv2d,
     allgather_lowering=chip.allgather_conv2d,
+    fusable_with=("conv2d",),
+    fused_systolic_lowering=chip.fused_halo_chain,
     # output rows divide the linearized chain of the parity meshes (2x2
     # and 2x4); width stays odd to keep the staging padding exercised
     smoke_args=(64, 61, 4, 4),
@@ -339,6 +362,8 @@ register(KernelSpec(
     operands=_jacobi_operands,
     systolic_lowering=chip.halo_stencil,
     allgather_lowering=chip.allgather_stencil,
+    fusable_with=("conv2d", "jacobi2d", "jacobi2d_9pt"),
+    fused_systolic_lowering=chip.fused_halo_chain,
     smoke_args=(126, 126),
     bench_cases=(
         ("float32", (10238, 10238)),
@@ -402,6 +427,8 @@ register(KernelSpec(
     operands=_jacobi9_operands,
     systolic_lowering=chip.halo_stencil,
     allgather_lowering=chip.allgather_stencil,
+    fusable_with=("conv2d", "jacobi2d", "jacobi2d_9pt"),
+    fused_systolic_lowering=chip.fused_halo_chain,
     smoke_args=(64, 64),
     bench_cases=(
         ("float32", (10236, 10236)),

@@ -50,6 +50,16 @@ all-gather/broadcast baselines, ``allgather_lowering`` — the
                   row-replicated); the three-operand contraction runs per
                   step with ``acc_dtype`` accumulation.
 
+A second hook family serves *fused chains* (``core/fusion.py``):
+``KernelSpec.fused_systolic_lowering`` hooks take a ``FusedPlan`` and run
+every chain stage back-to-back inside ONE shard_map —
+``fused_halo_chain`` (one deep halo exchange feeds all stencil stages),
+``fused_cannon_mm`` (one pre-skew serves back-to-back rings with the
+interstage bias/activation applied shard-resident) and
+``fused_cannon_fft2d`` (both DFT stages on one ring, Y never leaves the
+chips).  The intermediate stays shard-resident in the acc dtype instead
+of round-tripping through HBM.
+
 Operand contracts match the specs' (see ``registry.py``).  Shard
 divisibility (and, for the Cannon rings, a square space mesh) is checked
 eagerly with actionable errors; halo/window widths must fit inside the
@@ -573,6 +583,272 @@ def ring_mttkrp(plan: "ExecutionPlan", mesh) -> Callable:
         _require_divisible("mttkrp B cols (j)", b.shape[1], steps, ax1)
         _require_divisible("mttkrp C cols (j)", c.shape[1], steps, ax1)
         return fn(x, b, c)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Fused chains: one shard_map runs every chain stage back-to-back
+# (KernelSpec.fused_systolic_lowering hooks — see core/fusion.py)
+# ---------------------------------------------------------------------------
+
+def fused_halo_chain(fused_plan, mesh) -> Callable:
+    """Deep-halo schedule for stencil→stencil chains (conv2d → jacobi2d,
+    jacobi2d → jacobi2d_9pt, ...).
+
+    Every halo-family stage is a one-sided VALID window op, so the whole
+    chain shrinks the grid by ``(s_h, s_w)`` — the sum of per-stage
+    window shrinks.  The *final* output is sharded (ax0, ax1); each chip
+    imports its east and south deep-halo strips with ONE ppermute per
+    axis (width ``s_w`` / ``s_h`` — the strips the *whole chain* needs,
+    not one stage), chips on the array boundary substitute the global
+    tail strips, and every stage then runs chip-locally on the extended
+    block in acc dtype.  The overlap region is *recomputed* by each chip
+    instead of round-tripping the intermediate through HBM — the classic
+    fusion trade, and the whole point: one exchange feeds all stages,
+    zero intermediate materializations.
+    """
+    from repro.core import fusion
+
+    ax0, ax1 = _space_axes(fused_plan.stage_plans[0])
+    n0, n1 = mesh.shape[ax0], mesh.shape[ax1]
+    descs = fusion.halo_stage_descs(fused_plan.chain)
+    s_h, s_w = fusion.halo_shrink(fused_plan.chain)
+
+    def local(x, bot, rgt, *wops):
+        acc_t = runtime.acc_dtype(x.dtype)
+        row = jax.lax.axis_index(ax0)
+        col = jax.lax.axis_index(ax1)
+        bh, bw = x.shape
+        # east deep halo: the right neighbour's left s_w core columns;
+        # the last column substitutes the global right strip.
+        if s_w:
+            if n1 > 1:
+                he = jax.lax.ppermute(
+                    x[:, :s_w], ax1, [(q + 1, q) for q in range(n1 - 1)])
+            else:
+                he = jnp.zeros((bh, s_w), x.dtype)
+            rgt_blk = jax.lax.dynamic_slice(rgt, (row * bh, 0), (bh, s_w))
+            he = jnp.where(col == n1 - 1, rgt_blk, he)
+            xe = jnp.concatenate([x, he], axis=1)
+        else:
+            xe = x
+        # south deep halo: the lower neighbour's top s_h rows of its
+        # *extended* block (its east halo rides along, covering the
+        # corner); the last row substitutes the global bottom strip.
+        if s_h:
+            if n0 > 1:
+                hs = jax.lax.ppermute(
+                    xe[:s_h, :], ax0, [(q + 1, q) for q in range(n0 - 1)])
+            else:
+                hs = jnp.zeros((s_h, xe.shape[1]), x.dtype)
+            bot_blk = jax.lax.dynamic_slice(
+                bot, (0, col * bw), (s_h, bw + s_w))
+            hs = jnp.where(row == n0 - 1, bot_blk, hs)
+            xx = jnp.concatenate([xe, hs], axis=0)
+        else:
+            xx = xe
+        # run every stage chip-locally; the intermediate never leaves
+        # the chip and stays in acc dtype between stages.
+        cur = xx.astype(acc_t)
+        for wi, desc in enumerate(descs):
+            if desc[0] == "conv":
+                p, q = desc[1]
+                f = wops[wi].astype(acc_t)
+                oh, ow = cur.shape[0] - p + 1, cur.shape[1] - q + 1
+                nxt = jnp.zeros((oh, ow), acc_t)
+                for pp in range(p):
+                    for qq in range(q):
+                        nxt = nxt + cur[pp:pp + oh, qq:qq + ow] * f[pp, qq]
+            else:
+                _, offs, (kh, kw) = desc
+                wts = wops[wi]
+                oh, ow = cur.shape[0] - kh + 1, cur.shape[1] - kw + 1
+                nxt = jnp.zeros((oh, ow), acc_t)
+                for s, (di, dj) in enumerate(offs):
+                    nxt = nxt + wts[s].astype(acc_t) * \
+                        cur[di:di + oh, dj:dj + ow]
+            cur = nxt
+        return cur
+
+    wspecs = tuple(
+        P(None, None) if desc[0] == "conv" else P(None) for desc in descs)
+    fn = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(ax0, ax1), P(None, None), P(None, None), *wspecs),
+        out_specs=P(ax0, ax1),
+        check=False,
+    )
+
+    def run(*operands):
+        stage_ops, _ = fusion.split_operands(fused_plan, operands)
+        grid = stage_ops[0][0]
+        wops = [*stage_ops[0][1:]]
+        for ops in stage_ops[1:]:
+            wops.extend(ops)
+        hh, ww = grid.shape
+        hf, wf = hh - s_h, ww - s_w
+        _require_divisible("fused chain output rows", hf, n0, ax0)
+        _require_divisible("fused chain output cols", wf, n1, ax1)
+        if (n0 > 1 and s_h > hf // n0) or (n1 > 1 and s_w > wf // n1):
+            raise ValueError(
+                f"fused deep halo {s_h}x{s_w} exceeds the "
+                f"{hf // n0}x{wf // n1} shard — a one-hop exchange can "
+                "only import the adjacent shard; use fewer chips or a "
+                "larger grid")
+        out = fn(grid[:hf, :wf], grid[hf:, :], grid[:hf, wf:], *wops)
+        return out.astype(runtime.out_dtype(grid.dtype))
+
+    return run
+
+
+def fused_cannon_mm(fused_plan, mesh) -> Callable:
+    """Back-to-back Cannon rings for dense→dense chains (the MLP
+    up-projection → down-projection pair).
+
+    Stage 1 is the standard ring; its accumulator lands UNSKEWED at
+    (i, j) — exactly the (i→ax0, k→ax1) sharding the next stage's left
+    operand needs, so C never leaves the chips: the interstage bias +
+    activation applies shard-resident, then C re-skews straight into the
+    next ring.  Later-stage weight operands arrive naturally sharded
+    P(ax0, ax1); the interstage bias vector rides P(ax1).
+    """
+    from repro.core import fusion
+
+    ax0, ax1, steps = _require_square(
+        fused_plan.stage_plans[0], mesh, "fused cannon chain")
+    inter = fused_plan.interstage
+    n_bound = len(fused_plan.chain.stages) - 1
+
+    def local(*blks):
+        it = iter(blks)
+        a, b = next(it), next(it)
+        acc_t = runtime.acc_dtype(a.dtype)
+        out_t = runtime.out_dtype(a.dtype)
+        skew_a, skew_b = _skew_perms(steps)
+        rot = _rot_perm(steps)
+
+        def dot2d(x, y):
+            if jnp.issubdtype(x.dtype, jnp.integer):
+                x, y = x.astype(jnp.int32), y.astype(jnp.int32)
+            return jnp.dot(x, y, preferred_element_type=acc_t)
+
+        def ring(x, y):
+            x = jax.lax.ppermute(x, (ax0, ax1), skew_a)
+            y = jax.lax.ppermute(y, (ax0, ax1), skew_b)
+
+            def body(step, carry):
+                x, y, acc = carry
+                acc = acc + dot2d(x, y)
+                x = jax.lax.ppermute(x, ax1, rot)
+                y = jax.lax.ppermute(y, ax0, rot)
+                return x, y, acc
+
+            acc = jnp.zeros((x.shape[0], y.shape[1]), acc_t)
+            *_, acc = jax.lax.fori_loop(0, steps, body, (x, y, acc))
+            return acc
+
+        # same flush ladder as the unfused stages: int chains stay in
+        # the (identical) int32 accumulator, so parity is bit-exact
+        cur = ring(a, b).astype(out_t)
+        for bnd in range(n_bound):
+            bias = next(it) if fusion.interstage_has_bias(inter[bnd]) \
+                else None
+            cur = fusion.interstage_apply(inter[bnd], cur, bias)
+            cur = ring(cur, next(it)).astype(out_t)
+        return cur
+
+    in_specs = [P(ax0, ax1), P(ax0, ax1)]
+    for bnd in range(n_bound):
+        if fusion.interstage_has_bias(inter[bnd]):
+            in_specs.append(P(ax1))
+        in_specs.append(P(ax0, ax1))
+    fn = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=tuple(in_specs),
+        out_specs=P(ax0, ax1),
+        check=False,
+    )
+
+    def run(*operands):
+        stage_ops, _ = fusion.split_operands(fused_plan, operands)
+        a, b = stage_ops[0]
+        _require_divisible("fused cannon A rows", a.shape[0], steps, ax0)
+        _require_divisible("fused cannon A cols", a.shape[1], steps, ax1)
+        _require_divisible("fused cannon B cols", b.shape[1], steps, ax1)
+        for ops in stage_ops[1:]:
+            _require_divisible(
+                "fused cannon stage cols", ops[0].shape[1], steps, ax1)
+        return fn(*operands)
+
+    return run
+
+
+def fused_cannon_fft2d(fused_plan, mesh) -> Callable:
+    """Both DFT stages of the 2-D FFT on ONE complex two-plane ring.
+
+    The unfused chip path (``cannon_fft2d``) launches the ring twice and
+    materializes Y = F_R @ X between the shard_map calls; here both
+    stages run inside one shard_map, so (y_re, y_im) stay shard-resident
+    — after ring 1 the Y block sits unskewed at (i, j), exactly the
+    left-operand sharding ring 2 re-skews from.
+    """
+    ax0, ax1, steps = _require_square(
+        fused_plan.stage_plans[0], mesh, "fused complex cannon (fft2d)")
+
+    def local(fr_r, fr_i, x_r, x_i, fc_r, fc_i):
+        skew_a, skew_b = _skew_perms(steps)
+        rot = _rot_perm(steps)
+
+        def dot(a, b):
+            return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+        def cring(ar, ai, br, bi):
+            ar = jax.lax.ppermute(ar, (ax0, ax1), skew_a)
+            ai = jax.lax.ppermute(ai, (ax0, ax1), skew_a)
+            br = jax.lax.ppermute(br, (ax0, ax1), skew_b)
+            bi = jax.lax.ppermute(bi, (ax0, ax1), skew_b)
+
+            def body(step, carry):
+                ar, ai, br, bi, accr, acci = carry
+                accr = accr + dot(ar, br) - dot(ai, bi)
+                acci = acci + dot(ar, bi) + dot(ai, br)
+                ar = jax.lax.ppermute(ar, ax1, rot)
+                ai = jax.lax.ppermute(ai, ax1, rot)
+                br = jax.lax.ppermute(br, ax0, rot)
+                bi = jax.lax.ppermute(bi, ax0, rot)
+                return ar, ai, br, bi, accr, acci
+
+            accr = jnp.zeros((ar.shape[0], br.shape[1]), jnp.float32)
+            acci = jnp.zeros((ar.shape[0], br.shape[1]), jnp.float32)
+            out = jax.lax.fori_loop(
+                0, steps, body, (ar, ai, br, bi, accr, acci))
+            return out[4], out[5]
+
+        yr, yi = cring(fr_r, fr_i, x_r, x_i)   # stage 1: F_R @ X
+        return cring(yr, yi, fc_r, fc_i)       # stage 2: Y @ F_C on-chip
+
+    spec = P(ax0, ax1)
+    fn = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(spec,) * 6,
+        out_specs=(spec, spec),
+        check=False,
+    )
+
+    def run(*operands):
+        from .fft2d import dft_matrix
+
+        x_re, x_im = operands[0], operands[1]
+        r, c = x_re.shape
+        _require_divisible("fused fft2d rows", r, steps, ax0)
+        _require_divisible("fused fft2d cols", c, steps, ax1)
+        fr_re, fr_im = (jnp.asarray(m) for m in dft_matrix(r))
+        fc_re, fc_im = (jnp.asarray(m) for m in dft_matrix(c))
+        return fn(fr_re, fr_im, x_re, x_im, fc_re, fc_im)
 
     return run
 

@@ -18,7 +18,8 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.planned import planned_bmm, planned_dense
+from repro.kernels.planned import (planned_bmm, planned_dense,
+                                   planned_mlp_pair)
 from repro.parallel.sharding import constrain
 
 
@@ -405,17 +406,19 @@ def mlp_specs(cfg):
 
 
 def apply_mlp(p, cfg, x):
-    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
     if cfg.mlp_glu:
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
         h = act(planned_dense(x, p["wg"], site="mlp.gate")) * planned_dense(
             x, p["wu"], site="mlp.up")
-    else:
-        h = act(planned_dense(x, p["wu"], site="mlp.up") + p["bu"])
-    h = constrain(h, "batch", None, "ff")
-    out = planned_dense(h, p["wd"], site="mlp.down")
-    if not cfg.mlp_glu:
-        out = out + p["bd"]
-    return out
+        h = constrain(h, "batch", None, "ff")
+        return planned_dense(h, p["wd"], site="mlp.down")
+    # non-GLU: up -> bias+act -> down is exactly the registry's mm+mm
+    # fusion chain — route it through the fused facade so serving traffic
+    # exercises chain plans; the output bias stays outside the chain
+    out = planned_mlp_pair(
+        x, p["wu"], p["bu"], p["wd"],
+        act="silu" if cfg.act == "silu" else "gelu", site="mlp.pair")
+    return out + p["bd"]
 
 
 # ---------------------------------------------------------------------------

@@ -171,9 +171,43 @@ def test_committed_table_serves_every_bench_shape_without_timing():
                 assert plan.backend in autotune.BACKENDS
                 served += 1
     assert autotune.counters()["measure_calls"] == before
-    # one entry per (spec, smoke+bench case, mesh)
-    assert served == len(autotune.load_table(
-        autotune.DEFAULT_TABLE_PATH)["entries"])
+    # the registry's smoke+bench cases are a *subset*: the committed
+    # table additionally covers the serving-shape census and the fused
+    # MLP-pair chain keys (gen_autotune --serving, PR 7)
+    entries = autotune.load_table(autotune.DEFAULT_TABLE_PATH)["entries"]
+    assert served <= len(entries)
+    assert any("+" in k for k in entries), (
+        "no fused-chain keys in the committed table — regenerate with "
+        "tools/gen_autotune.py")
+
+
+def test_committed_table_serves_fused_mlp_pair_chains():
+    """The serving MLP-pair chain entries resolve from the cache with a
+    measured winner (no timing at serve time), and their nested
+    per-stage measured shapes keep the entries honest."""
+    from repro.core import fusion
+    from repro.kernels.planned import plan_for
+
+    table = autotune.load_table(autotune.DEFAULT_TABLE_PATH)
+    chain_keys = [k for k in table["entries"] if "+" in k]
+    assert chain_keys
+    for key in chain_keys:
+        kind, dtype, extents, _mesh = key.split("|")
+        assert kind == "mm+mm"
+        entry = table["entries"][key]
+        assert entry["backend"] in fusion.FUSED_BACKENDS
+        assert isinstance(entry["measured_shape"][0], list), key
+    key = next(k for k in chain_keys if k.endswith("mesh1x8"))
+    _, dtype, extents, _ = key.split("|")
+    shapes = tuple(tuple(int(x) for x in part.split("x"))
+                   for part in extents.split("+"))
+    before = autotune.counters()["measure_calls"]
+    plan = plan_for("mm+mm", shapes, dtype,
+                    target=Target(name="t", mesh_shape=(1, 8)),
+                    policy=PlanPolicy(mode="cached"))
+    assert isinstance(plan, fusion.FusedPlan)
+    assert plan.provenance == "measured"
+    assert autotune.counters()["measure_calls"] == before
 
 
 def test_committed_table_entries_record_their_proxy():

@@ -1,0 +1,473 @@
+"""Cross-recurrence fusion pass: legality, operand contract, backend
+parity and the planned-facade routing (core/fusion.py, PR 7).
+
+Covers the spec-author contract (``fusable_with`` /
+``fused_systolic_lowering``), the typed ``FusionError`` rejections with
+the ``try_fuse`` fallback, bit-exact int parity of every fused backend
+against the composed per-stage XLA references, the chain keys in the
+autotune table, and the serving facade's fused MLP pair.  The chip-level
+one-shard_map schedules get their own ``pytest -m systolic`` subprocess
+sweep (2x2 ring + the 2x4 halo mesh the Cannon family rejects).
+"""
+
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import make_mesh
+from repro.core import Target, best_plan, lower_plan
+from repro.core import fusion
+from repro.core.autotune import PlanPolicy, autotune_key
+from repro.kernels import registry
+
+RNG = np.random.default_rng(11)
+
+#: 1x1 chip: every fused schedule is legal, ring length 1 — the smallest
+#: mesh all three families share (and the only one the driver's single
+#: host device carries without a forced device count).
+CHIP = Target(mesh_shape=(1, 1))
+
+
+def _chain(*specs_args, dtype="int16"):
+    """((name, args), ...) -> RecurrenceChain."""
+    return fusion.chain(*(
+        registry.get(nm).builder(*args, dtype) for nm, args in specs_args))
+
+
+def _conv_jacobi(dtype="int16"):
+    # conv2d output (64, 61) == jacobi2d's padded read footprint
+    return _chain(("conv2d", (64, 61, 4, 4)), ("jacobi2d", (62, 59)),
+                  dtype=dtype)
+
+
+def _mm_mm(dtype="int16"):
+    # (64, 32) @ (32, 96) -> (64, 96) @ (96, 48)
+    return _chain(("mm", (64, 96, 32)), ("mm", (64, 48, 96)), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# legality: typed rejections + the try_fuse fallback
+# ---------------------------------------------------------------------------
+
+def _reject(ch, reason, target=CHIP, interstage=None):
+    with pytest.raises(fusion.FusionError) as e:
+        fusion.fuse(ch, target, interstage=interstage)
+    assert e.value.reason == reason, (e.value.reason, str(e.value))
+    # the fallback contract: callers plan the stages unfused instead
+    assert fusion.try_fuse(ch, target, interstage=interstage) is None
+
+
+def test_reject_single_stage():
+    rec = registry.get("mm").builder(64, 48, 96, "int16")
+    _reject(fusion.chain(rec), "length")
+
+
+def test_reject_unregistered_stage():
+    import dataclasses
+
+    rec = registry.get("mm").builder(64, 48, 96, "int16")
+    ghost = dataclasses.replace(rec, name="not_a_recurrence")
+    _reject(fusion.chain(rec, ghost), "unregistered")
+
+
+def test_reject_flow_carried_stage():
+    """jacobi2d_ms carries a flow dependence along t — the sweep loop
+    must stay host-sequential, so it never joins a fused space mapping."""
+    spec = registry.get("jacobi2d_ms")
+    ms = spec.builder(*spec.smoke_args, "float32")
+    conv = registry.get("conv2d").builder(64, 61, 4, 4, "float32")
+    _reject(fusion.chain(conv, ms), "flow")
+
+
+def test_reject_unfusable_pair():
+    """mm declares fusable_with=('mm',): a conv2d producer is rejected
+    before any shape algebra runs (spec-author contract, docs/fusion.md)."""
+    conv = registry.get("conv2d").builder(64, 61, 4, 4, "int16")
+    mm = registry.get("mm").builder(64, 48, 96, "int16")
+    _reject(fusion.chain(conv, mm), "unfusable-pair")
+
+
+def test_reject_dtype_mismatch():
+    conv = registry.get("conv2d").builder(64, 61, 4, 4, "int16")
+    jac = registry.get("jacobi2d").builder(62, 59, "float32")
+    _reject(fusion.chain(conv, jac), "dtype-mismatch")
+
+
+def test_reject_shape_mismatch():
+    """The consumer's padded read footprint must equal the producer's
+    output domain exactly — a 60x60 jacobi grid reads 62x62, not the
+    conv's 64x61 output."""
+    _reject(_chain(("conv2d", (64, 61, 4, 4)), ("jacobi2d", (60, 60))),
+            "shape-mismatch")
+
+
+def test_reject_mesh_indivisible_halo():
+    """Fused output 62x59 cannot shard a 1x8 mesh (59 % 8 != 0)."""
+    _reject(_conv_jacobi(), "mesh-mismatch", Target(mesh_shape=(1, 8)))
+
+
+def test_reject_nonsquare_cannon_ring():
+    """The shared pre-skew/rotation sequence only closes on a square
+    array: a genuine 2x4 space mesh rejects the mm+mm chain."""
+    _reject(_mm_mm(), "mesh-mismatch", Target(mesh_shape=(2, 4)))
+
+
+def test_reject_ring_indivisible_extent():
+    ch = _chain(("mm", (63, 96, 32)), ("mm", (63, 48, 96)))
+    _reject(ch, "mesh-mismatch", Target(mesh_shape=(3, 3)))
+
+
+def test_reject_halo_exceeds_shard():
+    """conv2d 4x4 + jacobi star = deep halo 5x5 > a 3x3 shard — the
+    one-hop exchange can only import the adjacent shard."""
+    ch = _chain(("conv2d", (8, 8, 4, 4)), ("jacobi2d", (6, 6)))
+    _reject(ch, "halo-exceeds-shard", Target(mesh_shape=(2, 2)))
+
+
+def test_reject_bad_interstage():
+    _reject(_mm_mm(), "interstage", interstage=("warp",))
+    # interstage ops are a cannon-family feature (bias+act between GEMMs)
+    _reject(_conv_jacobi(), "interstage", interstage=("relu",))
+
+
+def test_degenerate_mesh_fuses_without_ring():
+    """A (1, 8)-style mesh has no square ring, but the single-launch
+    composition is still legal — this is how the serving facade's chip
+    target gets fused MLP pairs (systolic_ok=False, backends clamp to
+    the compositions)."""
+    ch = _chain(("mm", (64, 96, 32)), ("mm", (64, 48, 96)),
+                dtype="float32")
+    plan = fusion.fuse(ch, Target(name="planned_chip", mesh_shape=(1, 8)))
+    assert not plan.systolic_ok
+    assert fusion.fused_available_backends(plan) == ("xla", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# operand contract
+# ---------------------------------------------------------------------------
+
+def test_chain_operand_layout():
+    ch = _mm_mm()
+    plan = fusion.fuse(ch, CHIP, interstage=("bias_relu",))
+    ops = fusion.chain_operands(ch, RNG, interstage=("bias_relu",))
+    # x[64,32], wu[32,96], bias[96], wd[96,48]
+    assert [tuple(o.shape) for o in ops] == [
+        (64, 32), (32, 96), (96,), (96, 48)]
+    stage_ops, biases = fusion.split_operands(plan, ops)
+    assert [len(s) for s in stage_ops] == [2, 1]
+    assert biases[0] is not None and biases[0].shape == (96,)
+    with pytest.raises(ValueError, match="expects 4 operands"):
+        fusion.split_operands(plan, ops[:-1])
+
+
+def test_fft_chain_operands_drop_both_planes():
+    """The fft producer has two outputs (re, im): the consumer stage
+    contributes no fresh operands, so the chain's are just the producer's
+    (F_re, F_im, x_re, x_im, ...)."""
+    ch = _chain(("fft2d_stage", (16, 16)), ("fft2d_stage", (16, 16)),
+                dtype="cfloat")
+    spec = registry.get("fft2d_stage")
+    ops = fusion.chain_operands(ch, RNG)
+    assert len(ops) == spec.arity
+
+
+def test_predicted_bytes_saved_counts_intermediate_round_trip():
+    plan = fusion.fuse(_conv_jacobi(), CHIP)
+    # 64x61 int32 accumulator intermediate, written + read back
+    assert plan.predicted_bytes_saved == 2 * 4 * 64 * 61
+    assert "fused conv2d+jacobi2d" in plan.describe()
+
+
+# ---------------------------------------------------------------------------
+# backend parity (1x1 mesh; int dtypes bit-exact)
+# ---------------------------------------------------------------------------
+
+def _fused_parity(ch, interstage=None, atol=0.0):
+    plan = fusion.fuse(ch, CHIP, interstage=interstage)
+    ops = fusion.chain_operands(ch, RNG, interstage=interstage)
+    expect = np.asarray(lower_plan(plan, backend="xla")(*ops))
+    mesh = make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+    for backend in ("fused_systolic", "pallas"):
+        fn = fusion.lower_fused(plan, backend=backend, mesh=mesh,
+                                interpret=True)
+        out = np.asarray(jax.jit(fn)(*ops))
+        np.testing.assert_allclose(
+            out.astype(np.float64), expect.astype(np.float64),
+            atol=atol, rtol=0.0 if atol == 0.0 else 1e-3)
+    return plan, expect
+
+
+def test_fused_halo_chain_bit_exact_int():
+    """conv2d -> jacobi2d int16: one deep halo exchange, int32
+    accumulator ladder — bit-exact against the composed references."""
+    plan, out = _fused_parity(_conv_jacobi())
+    assert plan.family == "halo" and out.shape == (62, 59)
+
+
+def test_fused_three_stage_stencil_tower():
+    """jacobi2d -> jacobi2d -> jacobi2d_9pt: the deep halo covers three
+    windows (shrink 2+2+4, the 9pt star reads radius 2) and the
+    descriptors apply in order."""
+    ch = _chain(("jacobi2d", (68, 68)), ("jacobi2d", (66, 66)),
+                ("jacobi2d_9pt", (62, 62)))
+    plan, out = _fused_parity(ch)
+    assert fusion.halo_shrink(ch) == (8, 8) and out.shape == (62, 62)
+
+
+def test_fused_cannon_mm_bit_exact_int():
+    plan, out = _fused_parity(_mm_mm())
+    assert plan.family == "cannon" and out.shape == (64, 48)
+
+
+def test_fused_cannon_interstage_bias_act():
+    """bias+gelu applies shard-resident between the rings; parity holds
+    against the composed reference with the same boundary op."""
+    ch = _mm_mm(dtype="float32")
+    plan, _ = _fused_parity(ch, interstage=("bias_gelu",), atol=1e-3)
+    assert plan.interstage == ("bias_gelu",)
+
+
+def test_fused_fft_chain_matches_full_fft():
+    """Both DFT stages in one shard_map equal the registered full-FFT
+    reference (which is also the chain composition, one call)."""
+    ch = _chain(("fft2d_stage", (16, 16)), ("fft2d_stage", (16, 16)),
+                dtype="cfloat")
+    plan = fusion.fuse(ch, CHIP)
+    ops = fusion.chain_operands(ch, RNG)
+    exp_re, exp_im = lower_plan(plan, backend="xla")(*ops)
+    mesh = make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+    out_re, out_im = jax.jit(
+        fusion.lower_fused(plan, backend="fused_systolic", mesh=mesh))(*ops)
+    np.testing.assert_allclose(np.asarray(out_re), np.asarray(exp_re),
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(out_im), np.asarray(exp_im),
+                               atol=1e-3)
+
+
+def test_fused_vs_standalone_stage_launches():
+    """Fusion is an execution-schedule change only: the fused output
+    equals running the stages as two separate planned launches."""
+    ch = _conv_jacobi()
+    plan = fusion.fuse(ch, CHIP)
+    ops = fusion.chain_operands(ch, RNG)
+    stage_ops, _ = fusion.split_operands(plan, ops)
+    conv_plan = best_plan(ch.stages[0], CHIP)
+    jac_plan = best_plan(ch.stages[1], CHIP)
+    mid = lower_plan(conv_plan, backend="xla")(*stage_ops[0])
+    expect = lower_plan(jac_plan, backend="xla")(mid, *stage_ops[1])
+    out = lower_plan(plan, backend="xla")(*ops)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+# ---------------------------------------------------------------------------
+# mapper / codegen / autotune integration
+# ---------------------------------------------------------------------------
+
+def test_best_plan_accepts_chains():
+    plan = best_plan(_conv_jacobi(), CHIP)
+    assert isinstance(plan, fusion.FusedPlan)
+    assert plan.provenance == "modelled"
+
+
+def test_autotune_key_schema_for_chains():
+    key = autotune_key(_conv_jacobi(), (1, 1))
+    assert key == "conv2d+jacobi2d|int16|64x61x4x4+62x59x5|mesh1x1"
+    assert len(key.split("|")) == 4
+
+
+def test_resolve_serves_chain_requests():
+    from repro.kernels.planned import plan_for
+
+    plan = plan_for("mm+mm", ((64, 96, 32), (64, 48, 96)), "float32",
+                    target=Target(mesh_shape=(1, 8)),
+                    policy=PlanPolicy(mode="modelled"))
+    assert isinstance(plan, fusion.FusedPlan)
+    assert plan.chain.name == "mm+mm"
+    # illegal chains resolve to None (facade falls back to unfused)
+    assert plan_for("mm+mm", ((63, 96, 32), (63, 48, 96)), "float32",
+                    target=Target(mesh_shape=(3, 3)),
+                    policy=PlanPolicy(mode="modelled")) is None
+
+
+def test_lower_plan_dispatches_fused_plans():
+    plan = fusion.fuse(_mm_mm(), CHIP)
+    ops = fusion.chain_operands(_mm_mm(), RNG)
+    out = lower_plan(plan, backend="xla")(*ops)
+    assert out.shape == (64, 48)
+
+
+def test_apply_policy_clamps_fused_backend_to_available(tmp_path):
+    """A table entry recorded on a ring-capable machine must not force
+    fused_systolic where the plan has no ring (degenerate 1x8 mesh):
+    the cached stamp clamps to the fastest runnable composition."""
+    from repro.core import autotune
+
+    ch = _chain(("mm", (64, 96, 32)), ("mm", (64, 48, 96)),
+                dtype="float32")
+    plan = fusion.fuse(ch, Target(mesh_shape=(1, 8)))
+    key = autotune_key(ch, (1, 8))
+    table = autotune.new_table("test")
+    table["entries"][key] = {
+        "backend": "fused_systolic",
+        "us": {"fused_systolic": 1.0, "pallas": 9.0, "xla": 2.0},
+    }
+    path = tmp_path / "table.json"
+    autotune.save_table(path, table)
+    stamped = autotune.apply_policy(
+        plan, PlanPolicy(mode="cached", table_path=path))
+    assert stamped.provenance == "measured"
+    assert stamped.backend == "xla"  # fastest runnable composition
+
+
+def test_planned_mlp_pair_routes_fused():
+    from repro.kernels import planned
+
+    x = jnp.asarray(RNG.standard_normal((16, 64)), jnp.float32)
+    wu = jnp.asarray(RNG.standard_normal((64, 128)) * 0.1, jnp.float32)
+    bu = jnp.asarray(RNG.standard_normal((128,)) * 0.1, jnp.float32)
+    wd = jnp.asarray(RNG.standard_normal((128, 64)) * 0.1, jnp.float32)
+    planned.planned_report_clear()
+    out = planned.planned_mlp_pair(x, wu, bu, wd, act="gelu",
+                                   site="t.fusion_pair")
+    rep = planned.planned_report()["t.fusion_pair"]
+    assert rep["planned"] == 1 and rep["fallback"] == 0
+    assert "fused mm+mm" in rep["last_plan"]
+    ref = jax.nn.gelu(x @ wu + bu) @ wd
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_planned_mlp_pair_fallback_is_unfused_exact():
+    """An unsupported dtype mix falls back to the two planned_dense
+    launches (sites mlp.up / mlp.down) with identical semantics."""
+    from repro.kernels import planned
+
+    x = jnp.asarray(RNG.standard_normal((16, 64)), jnp.float16)
+    wu = jnp.asarray(RNG.standard_normal((64, 128)) * 0.1, jnp.float16)
+    bu = jnp.zeros((128,), jnp.float16)
+    wd = jnp.asarray(RNG.standard_normal((128, 64)) * 0.1, jnp.float16)
+    planned.planned_report_clear()
+    out = planned.planned_mlp_pair(x, wu, bu, wd, act="gelu",
+                                   site="t.fallback_pair")
+    rep = planned.planned_report()
+    assert rep["t.fallback_pair"]["fallback"] == 1
+    assert any(r.startswith("dtype:")
+               for r in rep["t.fallback_pair"]["reasons"])
+    assert {"mlp.up", "mlp.down"} <= set(rep)
+    ref = jax.nn.gelu(x @ wu + bu) @ wd
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=1e-2, rtol=1e-2)
+
+
+def test_observed_requests_census_records_chains():
+    from repro.kernels import planned
+
+    planned.observed_clear()
+    x = jnp.asarray(RNG.standard_normal((16, 64)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((64, 32)), jnp.float32)
+    planned.planned_dense(x, w, site="t.census")
+    planned.planned_mlp_pair(
+        x, w, jnp.zeros((32,), jnp.float32),
+        jnp.asarray(RNG.standard_normal((32, 64)), jnp.float32),
+        act="gelu", site="t.census_pair")
+    kinds = {k for k, _, _ in planned.observed_requests()}
+    assert {"mm", "mm+mm"} <= kinds
+    planned.observed_clear()
+    assert planned.observed_requests() == ()
+
+
+# ---------------------------------------------------------------------------
+# chip-level parity sweep (multi-device subprocess, pytest -m systolic)
+# ---------------------------------------------------------------------------
+
+_FUSED_SYSTOLIC_CODE = r"""
+import os
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=@DEVICES@"
+    ).strip()
+import sys
+sys.path.insert(0, "src")
+import numpy as np, jax
+from repro.compat import make_mesh
+from repro.core import Target, lower_plan
+from repro.core import fusion
+from repro.kernels import registry
+
+rng = np.random.default_rng(7)
+mesh_shape = @MESH_SHAPE@
+devs = jax.devices()[: mesh_shape[0] * mesh_shape[1]]
+mesh = make_mesh(mesh_shape, ("data", "model"), devices=devs)
+target = Target(mesh_shape=mesh_shape)
+for label, stages, dtype, inter in @CASES@:
+    ch = fusion.chain(*(
+        registry.get(nm).builder(*args, dtype) for nm, args in stages))
+    plan = fusion.fuse(ch, target, interstage=inter)
+    assert plan.systolic_ok, label
+    ops = fusion.chain_operands(ch, rng, interstage=inter)
+    expect = lower_plan(plan, backend="xla")(*ops)
+    fn = fusion.lower_fused(plan, backend="fused_systolic", mesh=mesh)
+    out = jax.jit(fn)(*ops)
+    outs = out if isinstance(out, tuple) else (out,)
+    exps = expect if isinstance(expect, tuple) else (expect,)
+    exact = dtype.startswith("int")
+    ok = all(
+        np.allclose(np.asarray(o, np.float64), np.asarray(e, np.float64),
+                    atol=0.0 if exact else 1e-2,
+                    rtol=0.0 if exact else 1e-3)
+        for o, e in zip(outs, exps))
+    print(f"{label}/{dtype}:{'OK' if ok else 'FAIL'}")
+"""
+
+
+def _run_fused_subprocess(mesh_shape, cases):
+    code = (
+        _FUSED_SYSTOLIC_CODE
+        .replace("@DEVICES@", str(mesh_shape[0] * mesh_shape[1]))
+        .replace("@MESH_SHAPE@", repr(tuple(mesh_shape)))
+        .replace("@CASES@", repr(tuple(cases)))
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True,
+        text=True, cwd=".", timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    lines = [ln for ln in proc.stdout.splitlines() if ":" in ln]
+    assert len(lines) == len(cases), proc.stdout
+    bad = [ln for ln in lines if not ln.endswith("OK")]
+    assert not bad, bad
+
+
+@pytest.mark.systolic
+def test_fused_parity_systolic_square_ring():
+    """One pre-skew serving two rings (mm+mm, with and without the
+    shard-resident bias+act) and the two-plane fft chain, on a real 2x2
+    host-device ring; int chains bit-exact."""
+    cases = (
+        ("mm+mm", (("mm", (64, 96, 32)), ("mm", (64, 48, 96))),
+         "int16", None),
+        ("mm+mm/bias_gelu", (("mm", (64, 96, 32)), ("mm", (64, 48, 96))),
+         "float32", ("bias_gelu",)),
+        ("fft2d", (("fft2d_stage", (16, 16)), ("fft2d_stage", (16, 16))),
+         "cfloat", None),
+    )
+    _run_fused_subprocess((2, 2), cases)
+
+
+@pytest.mark.systolic
+def test_fused_parity_systolic_2x4_halo_mesh():
+    """The deep-halo chain does not need a square mesh: conv2d ->
+    jacobi2d parity on the 2x4 mesh the Cannon rings reject (ISSUE PR 7
+    acceptance shape); int16 bit-exact."""
+    cases = (
+        ("conv2d+jacobi2d", (("conv2d", (66, 66, 4, 4)),
+                             ("jacobi2d", (64, 64))), "int16", None),
+        ("conv2d+jacobi2d", (("conv2d", (66, 66, 4, 4)),
+                             ("jacobi2d", (64, 64))), "float32", None),
+    )
+    _run_fused_subprocess((2, 4), cases)

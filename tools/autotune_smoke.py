@@ -1,17 +1,21 @@
 #!/usr/bin/env python
 """Autotune smoke for the CI bench-gate job.
 
-Three assertions, each cheap enough for every push:
+Four assertions, each cheap enough for every push:
 
 1. **Measure + roundtrip**: race two small shapes (``mm`` and
    ``jacobi2d`` smoke sizes) under ``PlanPolicy(mode="measured")`` into
    a scratch table, reload it, and require the reloaded table to serve
    both keys under ``mode="cached"`` with zero additional measurement.
-2. **Committed default table**: every registered spec's smoke shape —
+2. **Fused-chain roundtrip**: the same cycle for a ``mm+mm`` chain —
+   race the fused backends into a scratch table (a ``name1+name2|...``
+   key), reload, and serve the ``FusedPlan`` from cache with the same
+   measured winner and zero additional measurement.
+3. **Committed default table**: every registered spec's smoke shape —
    the exact requests ``benchmarks/run.py --ci`` plans — must hit the
    committed table (``best_plan`` returns a measured winner without
    timing anything), proving the ``--ci`` timings consult it.
-3. **Rejection path**: a corrupt table must fall back to the modelled
+4. **Rejection path**: a corrupt table must fall back to the modelled
    choice cleanly (no exception, miss counted).
 
     PYTHONPATH=src python tools/autotune_smoke.py
@@ -59,7 +63,37 @@ def main() -> int:
         print(f"autotune-smoke: measured->persisted->cached roundtrip OK "
               f"({sorted(table['entries'])})")
 
-    # 2. the committed default table serves every spec's --ci request
+    # 2. fused-chain measured -> persisted -> cached roundtrip
+    # (degenerate 1x8 mesh: the race stays on the cheap xla/pallas
+    # compositions — this host has one device, so fused_systolic is
+    # excluded from the candidate set)
+    from repro.core import fusion
+
+    chain_target = Target(name="chip_1x8", mesh_shape=(1, 8))
+    with tempfile.TemporaryDirectory() as td:
+        path = str(Path(td) / "autotune_chain_smoke.json")
+        measured = autotune.PlanPolicy(mode="measured", table_path=path,
+                                       reps=2, warmup=1)
+        cached = autotune.PlanPolicy(mode="cached", table_path=path)
+        ch = fusion.chain_from_request(
+            "mm+mm", ((24, 128, 64), (24, 64, 128)), "float32")
+        first = best_plan(ch, chain_target, policy=measured)
+        assert isinstance(first, fusion.FusedPlan), first
+        assert first.provenance == "measured", first
+        table = autotune.load_table(path)
+        key = autotune.autotune_key(ch, chain_target.mesh_shape)
+        assert key in table["entries"], sorted(table["entries"])
+        before = autotune.counters()["measure_calls"]
+        again = best_plan(ch, chain_target, policy=cached)
+        assert again.provenance == "measured"
+        assert again.backend == first.backend, (again.backend,
+                                                first.backend)
+        assert autotune.counters()["measure_calls"] == before, \
+            "cached mode must not measure chains"
+        print("autotune-smoke: fused-chain measured->persisted->cached "
+              f"roundtrip OK ({key} -> {first.backend})")
+
+    # 3. the committed default table serves every spec's --ci request
     ci_policy = autotune.PlanPolicy(mode="cached")
     before = autotune.counters()["measure_calls"]
     for spec in registry.specs():
@@ -72,7 +106,7 @@ def main() -> int:
     print(f"autotune-smoke: committed table covers all "
           f"{len(registry.specs())} specs' --ci requests, 0 measurements")
 
-    # 3. corrupt table -> clean modelled fallback
+    # 4. corrupt table -> clean modelled fallback
     with tempfile.TemporaryDirectory() as td:
         bad = Path(td) / "corrupt.json"
         bad.write_text("{not json", encoding="utf-8")

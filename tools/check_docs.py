@@ -19,6 +19,10 @@ Three checks, so the docs cannot silently rot as the code grows:
    ``PlanPolicy`` mode plus the committed ``default_autotune.json``
    table, and docs/architecture.md must describe ``PlanPolicy`` —
    the planning-policy surface cannot change undocumented.
+5. **Fusion coverage**: every spec that declares ``fusable_with`` must
+   appear in docs/fusion.md (the chain IR / legality / spec-author
+   guide) — a newly fused-capable spec has to document which chains it
+   joins.
 
     python tools/check_docs.py          # exits non-zero on any failure
 """
@@ -35,6 +39,7 @@ DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
 ARCHITECTURE = ROOT / "docs" / "architecture.md"
 SYSTOLIC_DOC = ROOT / "docs" / "systolic.md"
 AUTOTUNE_DOC = ROOT / "docs" / "autotune.md"
+FUSION_DOC = ROOT / "docs" / "fusion.md"
 PLAN_MODES = ("modelled", "cached", "measured")
 
 # [text](target) — excluding images handled the same way is fine too
@@ -134,6 +139,26 @@ def systolic_hooked_names() -> list[str]:
         return sorted(set(hooked))
 
 
+def fused_capable_names() -> list[str]:
+    """Specs that declare ``fusable_with`` producers — via import when
+    possible, else by parsing each register(...) block for the field
+    (dependency-free docs job)."""
+    try:
+        sys.path.insert(0, str(ROOT / "src"))
+        from repro.kernels import registry  # type: ignore
+
+        return [s.name for s in registry.specs() if s.fusable_with]
+    except Exception:
+        src = (ROOT / "src/repro/kernels/registry.py").read_text(
+            encoding="utf-8")
+        capable = []
+        for block in src.split("register(KernelSpec(")[1:]:
+            m = _SPEC_NAME.search(block)
+            if m and "fusable_with=" in block:
+                capable.append(m.group(1))
+        return sorted(set(capable))
+
+
 def check_registry_coverage(names: list[str]) -> list[str]:
     if not ARCHITECTURE.exists():
         return ["docs/architecture.md missing (registry coverage check)"]
@@ -153,6 +178,18 @@ def check_systolic_coverage(hooked: list[str]) -> list[str]:
         f"docs/systolic.md: systolic-hooked spec {name!r} is not "
         "documented (which schedule family serves it?)"
         for name in hooked
+        if f"`{name}`" not in text
+    ]
+
+
+def check_fusion_coverage(capable: list[str]) -> list[str]:
+    if not FUSION_DOC.exists():
+        return ["docs/fusion.md missing (fusion coverage check)"]
+    text = FUSION_DOC.read_text(encoding="utf-8")
+    return [
+        f"docs/fusion.md: fused-capable spec {name!r} (fusable_with) is "
+        "not documented (which chains does it join?)"
+        for name in capable
         if f"`{name}`" not in text
     ]
 
@@ -183,14 +220,17 @@ def check_autotune_docs() -> list[str]:
 def main() -> int:
     names = registered_names()
     hooked = systolic_hooked_names()
+    capable = fused_capable_names()
     errors = (check_links() + check_registry_coverage(names)
-              + check_systolic_coverage(hooked) + check_autotune_docs())
+              + check_systolic_coverage(hooked)
+              + check_fusion_coverage(capable) + check_autotune_docs())
     for e in errors:
         print(f"FAIL {e}")
     n_links = sum(
         len(_LINK.findall(prose_of(d))) for d in DOC_FILES if d.exists())
     print(f"check_docs: {len(DOC_FILES)} files, {n_links} links, "
-          f"{len(names)} registered specs ({len(hooked)} systolic-hooked) "
+          f"{len(names)} registered specs ({len(hooked)} systolic-hooked, "
+          f"{len(capable)} fused-capable) "
           f"-> {'FAILED' if errors else 'OK'}")
     return 1 if errors else 0
 

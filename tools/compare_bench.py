@@ -1,6 +1,6 @@
 #!/usr/bin/env python
 """Bench-regression gate: compare a fresh ``benchmarks/run.py --ci`` JSON
-against the committed baseline (``benchmarks/BENCH_PR6.json``).
+against the committed baseline (``benchmarks/BENCH_PR7.json``).
 
 Timings from different machines are not comparable raw, so the gate is
 *machine-normalized*: it computes the per-spec ratio new/baseline, takes
@@ -15,9 +15,21 @@ exactly:
   * ``plan_cache_misses`` may not increase (the spec started re-planning);
   * ``replan_hits`` must stay >= 1 (the LRU plan-cache contract);
   * ``autotune_hit`` may not flip true -> false (the spec lost its row in
-    the committed crossover table and silently fell back to modelled).
+    the committed crossover table and silently fell back to modelled);
+  * ``hbm_round_trips`` may not grow (an execution path started
+    materializing intermediates it used to keep resident).
 
-    python tools/compare_bench.py benchmarks/BENCH_PR6.json BENCH_NEW.json
+The ``chains`` section (fused producer→consumer cases) gates
+deterministically as well:
+
+  * a chain that was ``fused`` in the baseline may not regress to
+    unfused (the legality pass or a backend flip broke the fusion);
+  * the fused path must keep *strictly fewer* HBM round trips than its
+    unfused stage launches, and may not grow its own count;
+  * fused vs unfused timings come from the *same* fresh run, so no
+    machine normalization applies: ``speedup`` must stay > 1.0.
+
+    python tools/compare_bench.py benchmarks/BENCH_PR7.json BENCH_NEW.json
 
 Exit code 0 = within tolerance, 1 = regression.  Dependency-free.
 """
@@ -66,6 +78,10 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
                 f"{name}: autotune table hit became a miss — the spec "
                 "lost its committed crossover-table coverage (regenerate "
                 "with tools/gen_autotune.py)")
+        if n.get("hbm_round_trips", 1) > b.get("hbm_round_trips", 1):
+            errors.append(
+                f"{name}: HBM round trips grew "
+                f"{b.get('hbm_round_trips')} -> {n.get('hbm_round_trips')}")
         if b.get("us_per_call", 0) > 0:
             ratios[name] = n["us_per_call"] / b["us_per_call"]
 
@@ -84,12 +100,59 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
                 errors.append(
                     f"{name}: {rel:.2f}x slower than the suite median "
                     f"(tolerance {tolerance:.1f}x)")
+    errors += compare_chains(baseline, fresh)
+    return errors
+
+
+def compare_chains(baseline: dict, fresh: dict) -> list[str]:
+    """Deterministic gates for the fused-chain rows (docstring above)."""
+    errors: list[str] = []
+    base = baseline.get("chains", {})
+    new = fresh.get("chains", {})
+    for name in sorted(set(base) - set(new)):
+        errors.append(
+            f"chain {name}: in baseline but missing from fresh run")
+    for name in sorted(set(base) & set(new)):
+        b, n = base[name], new[name]
+        if b.get("fused", False) and not n.get("fused", False):
+            errors.append(
+                f"chain {name}: was fused in the baseline but the fresh "
+                "run fell back to unfused stage launches (fusion "
+                "legality or backend flip regression)")
+            continue
+        if not n.get("fused", False):
+            continue
+        bh = b.get("hbm_round_trips", {})
+        nh = n.get("hbm_round_trips", {})
+        print(f"  chain {name:18s} fused={n.get('fused_us', 0):10.1f}us "
+              f"unfused={n.get('unfused_us', 0):10.1f}us "
+              f"x{n.get('speedup', 0):.2f} "
+              f"hbm {nh.get('fused')} vs {nh.get('unfused')}")
+        if nh.get("fused", 1) > bh.get("fused", 1):
+            errors.append(
+                f"chain {name}: fused HBM round trips grew "
+                f"{bh.get('fused')} -> {nh.get('fused')}")
+        if nh.get("fused", 1) >= nh.get("unfused", 2):
+            errors.append(
+                f"chain {name}: the fused path no longer has strictly "
+                f"fewer HBM round trips ({nh.get('fused')} vs "
+                f"{nh.get('unfused')})")
+        if b.get("autotune_hit", False) and not n.get("autotune_hit",
+                                                      False):
+            errors.append(
+                f"chain {name}: autotune table hit became a miss — the "
+                "chain lost its committed crossover-table coverage")
+        if n.get("speedup", 0) <= 1.0:
+            errors.append(
+                f"chain {name}: fused no longer beats the summed unfused "
+                f"stage launches (speedup {n.get('speedup')}; same-run "
+                "timings, no machine normalization applies)")
     return errors
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("baseline", help="committed BENCH_PR6.json")
+    ap.add_argument("baseline", help="committed BENCH_PR7.json")
     ap.add_argument("fresh", help="fresh run.py --ci output")
     ap.add_argument("--tolerance", type=float, default=2.0,
                     help="allowed per-spec slowdown relative to the "

@@ -12,8 +12,17 @@ Run it on the hardware you serve on; the committed table was generated
 on a CPU host (interpret-mode Pallas), where XLA wins — on a real TPU
 the crossovers move, which is the whole point of measuring.
 
+The table also covers the **serving GEMM shapes**: ``--serving`` (on by
+default) traces the model stack's forward pass abstractly
+(``jax.eval_shape`` under the planned facade, no kernel runs) and reads
+back every ``(kind, shape, dtype)`` the facade tried to plan — single
+GEMMs are raced at the smoke proxy and keyed at their real shapes, and
+the non-GLU MLP up→down projection pairs land as **fused-chain**
+entries (``mm+mm|...`` keys, raced at their real shapes).
+
     PYTHONPATH=src python tools/gen_autotune.py \
-        [--out src/repro/core/default_autotune.json] [--reps 3]
+        [--out src/repro/core/default_autotune.json] [--reps 3] \
+        [--serving | --no-serving]
 """
 
 from __future__ import annotations
@@ -23,6 +32,41 @@ import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+#: Archs whose smoke configs stand in for serving traffic: one GLU
+#: decoder (dense mm sites) and one non-GLU enc-dec (the fused MLP pair).
+SERVING_ARCHS = ("qwen1.5-0.5b", "whisper-base")
+
+
+def serving_cases() -> tuple[tuple, tuple]:
+    """(extra_cases, chain_cases) from an abstract trace of the serving
+    stack: every shape the planned facade tried to plan, with the fused
+    MLP-pair chains split out.  No kernel executes (eval_shape)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.core.autotune import PlanPolicy
+    from repro.kernels import planned
+    from repro.models import build_model
+
+    planned.observed_clear()
+    with planned.override(enabled=True,
+                          policy=PlanPolicy(mode="modelled")):
+        for arch in SERVING_ARCHS:
+            cfg = get_smoke_config(arch)
+            api = build_model(cfg)
+            params = api.init(jax.random.PRNGKey(0))
+            toks = jnp.zeros((2, 12), jnp.int32)
+            batch = {"tokens": toks, "labels": toks}
+            if not cfg.mlp_glu:  # enc-dec batches carry audio frames
+                batch["frames"] = jnp.zeros((2, 8, cfg.d_model),
+                                            jnp.float32)
+            jax.eval_shape(api.loss, params, batch)
+    extra, chains = [], []
+    for kind, shape, dtype in planned.observed_requests():
+        (chains if "+" in kind else extra).append((kind, shape, dtype))
+    return tuple(extra), tuple(chains)
 
 
 def main() -> int:
@@ -37,6 +81,10 @@ def main() -> int:
     ap.add_argument("--mesh", action="append", default=None,
                     help="mesh RxC to key entries under (repeatable; "
                          "default: 1x1 and 1x8)")
+    ap.add_argument("--serving", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="also cover the model stack's serving GEMM "
+                         "shapes and fused MLP-pair chains (default on)")
     args = ap.parse_args()
 
     meshes = (tuple(tuple(int(d) for d in m.split("x"))
@@ -44,8 +92,15 @@ def main() -> int:
               if args.mesh else ((1, 1), (1, 8)))
     policy = autotune.PlanPolicy(mode="measured", reps=args.reps,
                                  warmup=args.warmup)
+    extra_cases, chain_cases = ((), ())
+    if args.serving:
+        extra_cases, chain_cases = serving_cases()
+        print(f"gen_autotune: serving census -> {len(extra_cases)} GEMM "
+              f"shapes, {len(chain_cases)} fused chains")
     print(f"gen_autotune: racing backends for meshes {meshes} ...")
-    table = autotune.build_default_table(meshes=meshes, policy=policy)
+    table = autotune.build_default_table(meshes=meshes, policy=policy,
+                                         extra_cases=extra_cases,
+                                         chain_cases=chain_cases)
     autotune.save_table(args.out, table)
     n = len(table["entries"])
     winners: dict[str, int] = {}
