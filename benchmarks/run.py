@@ -13,7 +13,7 @@ launches with the intermediate forced through HBM.  Planning consults
 the committed autotune crossover table under ``PlanPolicy(mode="cached")``
 — each row records which measured backend won and whether the table was
 hit — and execution dispatches to that winner.  CI compares the fresh
-file against the committed ``benchmarks/BENCH_PR7.json`` baseline with
+file against the committed ``benchmarks/BENCH_PR8.json`` baseline with
 ``tools/compare_bench.py`` (ratios are machine-normalized, so only real
 >2x per-spec regressions fail the gate; a fused chain case flipping
 back to unfused, or growing HBM round trips, fails deterministically).
@@ -115,15 +115,18 @@ def ci_bench(out_path: str) -> dict:
               f"misses={specs_out[spec.name]['plan_cache_misses']} "
               f"replan_hits={specs_out[spec.name]['replan_hits']}")
     chains_out = _ci_bench_chains(target, policy, rng)
+    serving_out = _ci_bench_serving()
     payload = {
-        "schema": 3,
+        "schema": 4,
         "note": ("per-spec smoke timings (interpret mode, autotuned "
                  "backend) + plan-cache/autotune counters + HBM "
                  "round-trip counts, plus fused-chain rows (fused vs "
-                 "unfused stage launches); compare with "
+                 "unfused stage launches) and serving rows (paged vs "
+                 "slot engine at one smoke arrival rate); compare with "
                  "tools/compare_bench.py, never raw across machines"),
         "specs": specs_out,
         "chains": chains_out,
+        "serving": serving_out,
     }
     with open(out_path, "w", encoding="utf-8") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
@@ -237,6 +240,55 @@ def _ci_bench_chains(target, policy, rng) -> dict:
     return out
 
 
+#: Serving smoke workload: one arrival rate, both engines, identical
+#: seeded request stream.  Chosen so the queue actually builds (the
+#: paged engine's bucketed-prefill advantage is visible) without
+#: oversubscribing the block pool (preemptions stay deterministic: 0).
+CI_SERVING_CASE = dict(arch="qwen1.5-0.5b", rate=8.0, requests=10,
+                       max_new=4, lanes=4, max_seq=64, block_size=8,
+                       seed=0)
+
+
+def _ci_bench_serving() -> dict:
+    """Paged vs slot serving rows for the gate.
+
+    Latencies are wall-time measurements (machine-normalized by the
+    comparator like the spec timings); ``decode_recompiles`` and
+    ``preemptions`` are deterministic and gate exactly — the paged
+    engine's AOT invariant pins recompiles at 0.  Both engines serve the
+    *same* seeded request stream, so the same-run throughput ordering
+    (paged > slot) is gated without normalization."""
+    try:
+        from benchmarks.bench_serving import (build_engine, make_requests,
+                                              run_load, warmup)
+    except ModuleNotFoundError:
+        # invoked as `python benchmarks/run.py`: sys.path[0] is the
+        # benchmarks dir itself, not the repo root
+        from bench_serving import (build_engine, make_requests, run_load,
+                                   warmup)
+
+    case = dict(CI_SERVING_CASE)
+    arch, rate = case.pop("arch"), case.pop("rate")
+    n, seed = case.pop("requests"), case.pop("seed")
+    max_new = case.pop("max_new")
+    out: dict = {}
+    for kind in ("paged", "slot"):
+        cfg, eng = build_engine(arch, kind, max_lanes=case["lanes"],
+                                max_seq=case["max_seq"],
+                                block_size=case["block_size"])
+        warmup(eng, cfg, max_new=max_new)
+        reqs = make_requests(cfg, n, seed=seed, max_new=max_new)
+        row = run_load(eng, reqs, rate=rate, seed=seed)
+        row["arch"] = arch
+        out[kind] = row
+        print(f"ci-bench serving {kind:5s} {arch:13s} rate={rate:.0f}/s "
+              f"tok/s={row['tokens_per_sec']:8.2f} "
+              f"p99={row['p99_ms']:8.1f}ms "
+              f"preempt={row['preemptions']} "
+              f"recompiles={row['decode_recompiles']}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all")
@@ -245,7 +297,7 @@ def main() -> None:
                          "smoke timings + plan-cache counters as JSON")
     ap.add_argument("--out", default="BENCH_NEW.json",
                     help="output path for --ci (pass "
-                         "benchmarks/BENCH_PR7.json explicitly when "
+                         "benchmarks/BENCH_PR8.json explicitly when "
                          "refreshing the committed baseline)")
     args = ap.parse_args()
     if args.ci:

@@ -214,6 +214,7 @@ class SiteStats:
     backends: dict = dataclasses.field(default_factory=dict)
     autotune: dict = dataclasses.field(
         default_factory=lambda: {"hit": 0, "miss": 0})
+    shapes: dict = dataclasses.field(default_factory=dict)
     last_shape: tuple = ()
     last_plan: str = ""
 
@@ -224,6 +225,7 @@ class SiteStats:
             "reasons": dict(self.reasons),
             "backends": dict(self.backends),
             "autotune": dict(self.autotune),
+            "shapes": dict(self.shapes),
             "last_shape": self.last_shape,
             "last_plan": self.last_plan,
         }
@@ -235,6 +237,8 @@ _REPORT: dict[str, SiteStats] = {}
 def _record(site: str, shape, *, plan=None, reason=None):
     st = _REPORT.setdefault(site, SiteStats())
     st.last_shape = tuple(shape)
+    key = str(tuple(shape))
+    st.shapes[key] = st.shapes.get(key, 0) + 1
     if plan is not None:
         st.planned += 1
         st.last_plan = plan.describe()
@@ -254,6 +258,35 @@ def planned_report() -> dict[str, dict]:
 
 def planned_report_clear() -> None:
     _REPORT.clear()
+
+
+def report_delta(before: dict[str, dict],
+                 after: dict[str, dict]) -> dict[str, dict]:
+    """Difference of two ``planned_report`` snapshots, *every* counter
+    delta'd: planned/fallback totals, per-reason and per-backend counts,
+    autotune hit/miss, and the per-shape call counts.  Sites with no
+    decisions inside the window are dropped; ``last_shape``/``last_plan``
+    keep the window-final value (they are states, not counters)."""
+    def sub(cur: dict, old: dict) -> dict:
+        out = {k: v - old.get(k, 0) for k, v in cur.items()}
+        return {k: v for k, v in out.items() if v}
+
+    delta: dict[str, dict] = {}
+    for site, st in after.items():
+        prev = before.get(site, {})
+        d_planned = st["planned"] - prev.get("planned", 0)
+        d_fallback = st["fallback"] - prev.get("fallback", 0)
+        if not (d_planned or d_fallback):
+            continue
+        delta[site] = dict(
+            st, planned=d_planned, fallback=d_fallback,
+            reasons=sub(st["reasons"], prev.get("reasons", {})),
+            backends=sub(st["backends"], prev.get("backends", {})),
+            autotune={k: st["autotune"][k] - prev.get("autotune", {}).get(
+                k, 0) for k in st["autotune"]},
+            shapes=sub(st.get("shapes", {}), prev.get("shapes", {})),
+        )
+    return delta
 
 
 #: Every (kind, shape, dtype) the facade tried to plan this process —

@@ -1,7 +1,7 @@
 """Serving launcher CLI.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-        --requests 16 --max-new 8
+        --requests 16 --max-new 8 [--engine paged]
 """
 
 from __future__ import annotations
@@ -18,25 +18,39 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="lanes for either engine")
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--engine", default="slot", choices=["slot", "paged"])
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV block granularity (paged engine)")
     args = ap.parse_args()
 
     from repro.configs import get_smoke_config
     from repro.models import build_model
-    from repro.serve import ServeEngine
+    from repro.serve import PagedServeEngine, ServeEngine
 
     cfg = get_smoke_config(args.arch)
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, max_slots=args.slots, max_seq=args.max_seq)
+    if args.engine == "paged":
+        eng = PagedServeEngine(cfg, max_lanes=args.slots,
+                               max_seq=args.max_seq,
+                               block_size=args.block_size)
+    else:
+        eng = ServeEngine(cfg, max_slots=args.slots, max_seq=args.max_seq)
     eng.load(params)
 
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
         plen = int(rng.integers(4, 16))
+        extra = None
+        if cfg.family == "encdec":  # audio models decode against frames
+            extra = {"frames": np.asarray(jax.numpy.asarray(
+                rng.standard_normal((cfg.enc_frames, cfg.d_model)),
+                jax.numpy.bfloat16))}
         eng.submit(rng.integers(0, cfg.vocab, plen),
-                   max_new_tokens=args.max_new)
+                   max_new_tokens=args.max_new, extra=extra)
     t0 = time.perf_counter()
     done = eng.run_until_drained()
     dt = time.perf_counter() - t0
@@ -57,6 +71,10 @@ def main():
         print(f"  {site}: {n_planned}/{n_fallback}  [{mix or '-'}]  "
               f"tune {tune['hit']}/{tune['miss']}")
     print(f"autotune (load-time delta): {eng.autotune_report}")
+    if args.engine == "paged":
+        print(f"paged stats: {eng.stats}")
+        assert eng.stats["decode_compiles"] == 1, \
+            "in-flight traffic recompiled the AOT decode executable"
     if planned_enabled():
         assert any(n for _, n, _, _, _ in rows), \
             "serving executed no planned GEMMs"

@@ -220,8 +220,13 @@ def cache_specs(cfg):
     }
 
 
-def prefill(p, cfg, frames, tokens, max_seq, cache_dtype=jnp.bfloat16):
-    """Encode audio, precompute cross K/V, run the teacher-forced prompt."""
+def prefill(p, cfg, frames, tokens, max_seq, cache_dtype=jnp.bfloat16,
+            last_index=None):
+    """Encode audio, precompute cross K/V, run the teacher-forced prompt.
+
+    ``last_index`` ([B] int32, optional): bucketed prefill — logits come
+    from each lane's last valid token instead of position -1 (tokens may
+    be right-padded), and ``cache["pos"]`` is set past it."""
     b, s = tokens.shape
     enc_out = encode(p, cfg, frames)
 
@@ -251,7 +256,14 @@ def prefill(p, cfg, frames, tokens, max_seq, cache_dtype=jnp.bfloat16):
     x, (ks, vs) = jax.lax.scan(body, x, (p["dec_layers"], enc_k, enc_v),
                                unroll=cfg.scan_unroll)
     x = L.apply_norm(p["ln_f"], cfg, x)
-    logits = planned_dense(x[:, -1:], p["embed"].T.astype(x.dtype),
+    if last_index is None:
+        sel = x[:, -1:]
+        pos = jnp.full((b,), s, jnp.int32)
+    else:
+        idx = last_index.astype(jnp.int32)
+        sel = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        pos = idx + 1
+    logits = planned_dense(sel, p["embed"].T.astype(x.dtype),
                            site="lm_head")[:, 0]
 
     cache = init_cache(cfg, b, max_seq, enc_k.shape[2], cache_dtype)
@@ -261,8 +273,65 @@ def prefill(p, cfg, frames, tokens, max_seq, cache_dtype=jnp.bfloat16):
     cache["v"] = jnp.pad(vs, pad)
     cache["enc_k"] = enc_k
     cache["enc_v"] = enc_v
-    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    cache["pos"] = pos
     return logits, cache
+
+
+def paged_layout(cfg) -> dict:
+    """Paged-cache leaf kinds: the growing decoder self-attention K/V
+    pages through block tables; the cross-attention encoder K/V is a
+    fixed-size per-lane block (``lane`` leaves — written once at admit,
+    never grown, nothing to page)."""
+    del cfg
+    return {"k": "paged", "v": "paged", "enc_k": "lane", "enc_v": "lane"}
+
+
+def init_paged_pools(cfg, num_blocks, block_size, max_lanes,
+                     dtype=jnp.bfloat16):
+    nl = cfg.n_layers
+    f = cfg.enc_frames
+    return {
+        "k": jnp.zeros(
+            (nl, num_blocks, block_size, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros(
+            (nl, num_blocks, block_size, cfg.n_kv_heads, cfg.hd), dtype),
+        "enc_k": jnp.zeros(
+            (nl, max_lanes, f, cfg.n_kv_heads, cfg.hd), dtype),
+        "enc_v": jnp.zeros(
+            (nl, max_lanes, f, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def decode_step_paged(p, cfg, pools, tokens, block_tables, pos, active):
+    """Block-paged decode twin of ``decode_step``: self-attention K/V via
+    per-lane block tables, cross-attention against the lane's resident
+    encoder K/V."""
+    x = p["embed"][tokens].astype(L._dtype(cfg))
+    x = x + jnp.take_along_axis(
+        p["pos_dec"][None].astype(x.dtype),
+        pos[:, None, None].astype(jnp.int32), axis=1)
+
+    def body(x, inp):
+        lp, pk, pv, ek, ev = inp
+        h = L.apply_norm(lp["ln1"], cfg, x)
+        attn, pk, pv = L.apply_attention_decode_paged(
+            lp["attn"], cfg, h, pk, pv, block_tables, pos, active)
+        x = x + attn
+        h = L.apply_norm(lp["ln_x"], cfg, x)
+        x = x + _cross_attend(lp["xattn"], cfg, h, ek, ev)
+        h = L.apply_norm(lp["ln2"], cfg, x)
+        x = x + L.apply_mlp(lp["mlp"], cfg, h)
+        return x, (pk, pv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x,
+        (p["dec_layers"], pools["k"], pools["v"],
+         pools["enc_k"], pools["enc_v"]), unroll=cfg.scan_unroll)
+    x = L.apply_norm(p["ln_f"], cfg, x)
+    logits = planned_dense(x, p["embed"].T.astype(x.dtype),
+                           site="lm_head")[:, 0]
+    new_pools = dict(pools, k=ks, v=vs)
+    return logits, new_pools
 
 
 def decode_step(p, cfg, cache, tokens):

@@ -244,6 +244,104 @@ def prefill(p, cfg, tokens, max_seq, cache_dtype=jnp.bfloat16):
     return logits, cache
 
 
+def paged_layout(cfg) -> dict:
+    """Paged-cache leaf kinds: the recurrent SSM/conv states are *per
+    lane* (``lane`` leaves, [L, max_lanes, ...] — a lane's state is a
+    fixed-size recurrence, there is nothing to page), while the shared
+    attention K/V pages like any transformer cache."""
+    layout = {"conv": "lane", "ssm": "lane"}
+    if n_attn_apps(cfg):
+        layout["k"] = "paged"
+        layout["v"] = "paged"
+    return layout
+
+
+def init_paged_pools(cfg, num_blocks, block_size, max_lanes,
+                     dtype=jnp.bfloat16):
+    napp = n_attn_apps(cfg)
+    di, ns = cfg.d_inner, cfg.ssm_state
+    pools = {
+        "conv": jnp.zeros(
+            (cfg.n_layers, max_lanes, cfg.ssm_conv - 1, di + 2 * ns),
+            dtype),
+        "ssm": jnp.zeros(
+            (cfg.n_layers, max_lanes, cfg.ssm_heads, cfg.ssm_headdim, ns),
+            jnp.float32),
+    }
+    if napp:
+        pools["k"] = jnp.zeros(
+            (napp, num_blocks, block_size, cfg.n_kv_heads, cfg.hd), dtype)
+        pools["v"] = jnp.zeros(
+            (napp, num_blocks, block_size, cfg.n_kv_heads, cfg.hd), dtype)
+    return pools
+
+
+def decode_step_paged(p, cfg, pools, tokens, block_tables, pos, active):
+    """Block-paged decode twin of ``decode_step``.  SSM/conv states are
+    per-lane and always advance (inactive lanes evolve garbage that the
+    next admit overwrites); the shared-attention K/V goes through the
+    block tables, with inactive-lane writes dropped."""
+    x = p["embed"][tokens].astype(L._dtype(cfg))
+    napp = n_attn_apps(cfg)
+    conv_dt = pools["conv"].dtype
+
+    def blk_body(x, inp):
+        lp, conv_c, ssm_c = inp
+        h = L.apply_norm(lp["ln"], cfg, x)
+        mc = {"conv": conv_c.astype(jnp.float32), "ssm": ssm_c}
+        out, mc = SSM.apply_mamba_step(lp["mamba"], cfg, h, mc)
+        return x + out, (mc["conv"].astype(conv_dt), mc["ssm"])
+
+    if napp == 0:
+        x, (new_conv, new_ssm) = jax.lax.scan(
+            blk_body, x, (p["trunk"], pools["conv"], pools["ssm"]),
+            unroll=cfg.scan_unroll)
+        new_pools = {"conv": new_conv, "ssm": new_ssm}
+    else:
+        every = cfg.attn_every
+        n_seg = cfg.n_layers // every
+        seg = jax.tree.map(
+            lambda a: a[: n_seg * every].reshape(
+                (n_seg, every) + a.shape[1:]),
+            (p["trunk"], pools["conv"], pools["ssm"]))
+        new_conv, new_ssm, new_k, new_v = [], [], [], []
+        for si in range(n_seg):
+            seg_i = jax.tree.map(lambda a: a[si], seg)
+            x, (nc, ns_) = jax.lax.scan(blk_body, x, seg_i,
+                                        unroll=cfg.scan_unroll)
+            new_conv.append(nc)
+            new_ssm.append(ns_)
+            h = L.apply_norm(p["shared"]["ln1"], cfg, x)
+            attn, pk, pv = L.apply_attention_decode_paged(
+                p["shared"]["attn"], cfg, h, pools["k"][si],
+                pools["v"][si], block_tables, pos, active)
+            new_k.append(pk)
+            new_v.append(pv)
+            x = x + attn
+            h = L.apply_norm(p["shared"]["ln2"], cfg, x)
+            x = x + L.apply_mlp(p["shared"]["mlp"], cfg, h)
+        rem = cfg.n_layers - n_seg * every
+        if rem:
+            tail = jax.tree.map(
+                lambda a: a[n_seg * every:],
+                (p["trunk"], pools["conv"], pools["ssm"]))
+            x, (nc, ns_) = jax.lax.scan(blk_body, x, tail,
+                                        unroll=cfg.scan_unroll)
+            new_conv.append(nc)
+            new_ssm.append(ns_)
+        new_pools = {
+            "k": jnp.stack(new_k),
+            "v": jnp.stack(new_v),
+            "conv": jnp.concatenate(new_conv, axis=0),
+            "ssm": jnp.concatenate(new_ssm, axis=0),
+        }
+
+    x = L.apply_norm(p["ln_f"], cfg, x)
+    logits = planned_dense(x, p["lm_head"].astype(x.dtype),
+                           site="lm_head")[:, 0]
+    return logits, new_pools
+
+
 def decode_step(p, cfg, cache, tokens):
     b = tokens.shape[0]
     pos = cache["pos"]

@@ -339,13 +339,37 @@ def apply_attention(p, cfg, x, positions, *, causal=True):
     return planned_dense(out, p["wo"], site="attn.out")
 
 
+def _masked_decode_attention(p, cfg, q, kseq, vseq, pos, *, sites):
+    """Shared one-token GQA decode core: masked scores over a [B,Skv,...]
+    K/V view (contiguous lane cache or block-table gather — the caller
+    picks), softmax, value readout, output projection.
+
+    Rows with kpos > pos are masked to -1e30, so uninitialized (or
+    pad-bucket) cache rows contribute exact zeros — the property that
+    makes the paged gather bit-identical to the contiguous cache."""
+    b = q.shape[0]
+    compute_dt = _dtype(cfg)
+    skv = kseq.shape[1]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    group = hq // hkv
+    qg = q.reshape(b, 1, hkv, group, hd)
+    logits = _gqa_scores(
+        qg, kseq.astype(compute_dt), sites[0]
+    ) / math.sqrt(hd)
+    kpos = jnp.arange(skv)[None, :]
+    mask = kpos <= pos[:, None]
+    logits = jnp.where(mask[:, None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(compute_dt)
+    out = _gqa_values(w, vseq.astype(compute_dt), sites[1])
+    out = out.reshape(b, 1, hq * hd)
+    return planned_dense(out, p["wo"], site="attn.out")
+
+
 def apply_attention_decode(p, cfg, x, cache_k, cache_v, pos):
     """One-token decode: x [B,1,d]; cache [B,S,Hkv,hd]; pos [B] int32.
 
     Low-precision caches (fp8) are storage-only: reads upcast to the
     compute dtype (bf16 math, fp8 HBM traffic — the serving pattern)."""
-    b = x.shape[0]
-    compute_dt = _dtype(cfg)
     q, k, v = _qkv(p, cfg, x, pos[:, None])
     # write new kv at pos
     cache_k = jax.vmap(
@@ -356,20 +380,62 @@ def apply_attention_decode(p, cfg, x, cache_k, cache_v, pos):
         lambda c, vv, pp: jax.lax.dynamic_update_slice(
             c, vv.astype(c.dtype), (pp, 0, 0))
     )(cache_v, v, pos)
-    skv = cache_k.shape[1]
-    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    group = hq // hkv
-    qg = q.reshape(b, 1, hkv, group, hd)
-    logits = _gqa_scores(
-        qg, cache_k.astype(compute_dt), "attn.decode_scores"
-    ) / math.sqrt(hd)
-    kpos = jnp.arange(skv)[None, :]
-    mask = kpos <= pos[:, None]
-    logits = jnp.where(mask[:, None, None, None], logits, -1e30)
-    w = jax.nn.softmax(logits, axis=-1).astype(compute_dt)
-    out = _gqa_values(w, cache_v.astype(compute_dt), "attn.decode_values")
-    out = out.reshape(b, 1, hq * hd)
-    return planned_dense(out, p["wo"], site="attn.out"), cache_k, cache_v
+    out = _masked_decode_attention(
+        p, cfg, q, cache_k, cache_v, pos,
+        sites=("attn.decode_scores", "attn.decode_values"))
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# block-paged KV cache primitives (continuous-batching serving)
+# ---------------------------------------------------------------------------
+
+def paged_write(pool, new, block_tables, pos, active):
+    """Scatter one token's K/V rows into a block pool.
+
+    pool [NB, bs, ...]; new [B, ...] (one row per lane); block_tables
+    [B, T] int32; pos [B] int32 (the row each lane writes); active [B]
+    bool.  Inactive lanes MUST NOT write — their table rows may point at
+    blocks since re-allocated to another lane — so their flat index is
+    forced out of range and dropped by the scatter (``mode="drop"``),
+    never clamped onto a live row."""
+    nb, bs = pool.shape[0], pool.shape[1]
+    blk = jnp.take_along_axis(
+        block_tables, (pos // bs)[:, None], axis=1)[:, 0]
+    idx = blk * bs + pos % bs
+    idx = jnp.where(active, idx, nb * bs)  # OOB sentinel -> dropped
+    flat = pool.reshape(nb * bs, *pool.shape[2:])
+    flat = flat.at[idx].set(new.astype(pool.dtype), mode="drop")
+    return flat.reshape(pool.shape)
+
+
+def paged_gather(pool, block_tables):
+    """Assemble each lane's logical K/V sequence from its block table.
+
+    pool [NB, bs, ...]; block_tables [B, T] -> [B, T*bs, ...].  Rows past
+    the lane's ``pos`` are garbage (freed or never-written blocks) — the
+    decode mask hides them, exactly like the zero tail of a contiguous
+    lane cache."""
+    g = pool[block_tables]  # [B, T, bs, ...]
+    return g.reshape(block_tables.shape[0], -1, *pool.shape[2:])
+
+
+def apply_attention_decode_paged(p, cfg, x, pool_k, pool_v, block_tables,
+                                 pos, active):
+    """Block-paged one-token decode: same math as
+    ``apply_attention_decode`` but K/V live in a shared block pool indexed
+    through per-lane block tables, so admitting or evicting a lane is a
+    host-side table edit — the compiled executable never changes shape.
+    """
+    q, k, v = _qkv(p, cfg, x, pos[:, None])
+    pool_k = paged_write(pool_k, k[:, 0], block_tables, pos, active)
+    pool_v = paged_write(pool_v, v[:, 0], block_tables, pos, active)
+    kseq = paged_gather(pool_k, block_tables)
+    vseq = paged_gather(pool_v, block_tables)
+    out = _masked_decode_attention(
+        p, cfg, q, kseq, vseq, pos,
+        sites=("attn.paged_scores", "attn.paged_values"))
+    return out, pool_k, pool_v
 
 
 # ---------------------------------------------------------------------------

@@ -131,14 +131,38 @@ def apply_mla(p, cfg, x, positions, *, causal=True):
     return planned_dense(out, p["wo"], site="mla.out")
 
 
+def _absorbed_decode(p, cfg, qn, qr, ckv_seq, kr_seq, pos):
+    """Absorbed scoring + latent readout over a [B,Skv,...] latent view
+    (contiguous lane cache or block-table gather).  Rows past ``pos``
+    are masked, so garbage tail rows contribute exact zeros."""
+    b = qn.shape[0]
+    h, nope, vd = cfg.n_heads, cfg.nope_head_dim, cfg.v_head_dim
+    rope, kvl = cfg.rope_head_dim, cfg.kv_lora_rank
+    # absorb W_uk into q:  q_abs[h, kvl] = qn[h] @ W_uk[h]^T
+    wuk = p["wuk"].reshape(kvl, h, nope)
+    q_abs = jnp.einsum("bqhd,lhd->bqhl", qn, wuk)  # [B,1,H,kvl]
+    scale = 1.0 / math.sqrt(nope + rope)
+    logits = (
+        jnp.einsum("bqhl,bkl->bhqk", q_abs, ckv_seq,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhd,bkd->bhqk", qr, kr_seq,
+                     preferred_element_type=jnp.float32)
+    ) * scale
+    kpos = jnp.arange(ckv_seq.shape[1])[None, :]
+    mask = kpos <= pos[:, None]
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(ckv_seq.dtype)
+    out_lat = jnp.einsum("bhqk,bkl->bqhl", w, ckv_seq)  # [B,1,H,kvl]
+    wuv = p["wuv"].reshape(kvl, h, vd)
+    out = jnp.einsum("bqhl,lhd->bqhd", out_lat, wuv).reshape(b, 1, h * vd)
+    return planned_dense(out, p["wo"], site="mla.out")
+
+
 def apply_mla_decode(p, cfg, x, cache_ckv, cache_kr, pos):
     """Absorbed decode: score/readout in the compressed latent space.
 
     cache_ckv: [B, S, kv_lora]; cache_kr: [B, S, rope]; pos: [B].
     """
-    b = x.shape[0]
-    h, nope, vd = cfg.n_heads, cfg.nope_head_dim, cfg.v_head_dim
-    rope, kvl = cfg.rope_head_dim, cfg.kv_lora_rank
     qn, qr = _queries(p, cfg, x, pos[:, None])  # [B,1,H,*]
     ckv_new, kr_new = _latent(p, cfg, x, pos[:, None])
     cache_ckv = jax.vmap(
@@ -149,23 +173,23 @@ def apply_mla_decode(p, cfg, x, cache_ckv, cache_kr, pos):
         lambda c, n, pp: jax.lax.dynamic_update_slice(
             c, n.astype(c.dtype), (pp, 0))
     )(cache_kr, kr_new, pos)
+    out = _absorbed_decode(p, cfg, qn, qr, cache_ckv, cache_kr, pos)
+    return out, cache_ckv, cache_kr
 
-    # absorb W_uk into q:  q_abs[h, kvl] = qn[h] @ W_uk[h]^T
-    wuk = p["wuk"].reshape(kvl, h, nope)
-    q_abs = jnp.einsum("bqhd,lhd->bqhl", qn, wuk)  # [B,1,H,kvl]
-    scale = 1.0 / math.sqrt(nope + rope)
-    logits = (
-        jnp.einsum("bqhl,bkl->bhqk", q_abs, cache_ckv,
-                   preferred_element_type=jnp.float32)
-        + jnp.einsum("bqhd,bkd->bhqk", qr, cache_kr,
-                     preferred_element_type=jnp.float32)
-    ) * scale
-    kpos = jnp.arange(cache_ckv.shape[1])[None, :]
-    mask = kpos <= pos[:, None]
-    logits = jnp.where(mask[:, None, None], logits, -1e30)
-    w = jax.nn.softmax(logits, axis=-1).astype(cache_ckv.dtype)
-    out_lat = jnp.einsum("bhqk,bkl->bqhl", w, cache_ckv)  # [B,1,H,kvl]
-    wuv = p["wuv"].reshape(kvl, h, vd)
-    out = jnp.einsum("bqhl,lhd->bqhd", out_lat, wuv).reshape(b, 1, h * vd)
-    return (planned_dense(out, p["wo"], site="mla.out"),
-            cache_ckv, cache_kr)
+
+def apply_mla_decode_paged(p, cfg, x, pool_ckv, pool_kr, block_tables,
+                           pos, active):
+    """Block-paged absorbed decode: the compressed latent cache lives in
+    a shared block pool indexed through per-lane block tables (see
+    ``layers.paged_write``/``paged_gather``)."""
+    from .layers import paged_gather, paged_write
+
+    qn, qr = _queries(p, cfg, x, pos[:, None])
+    ckv_new, kr_new = _latent(p, cfg, x, pos[:, None])
+    pool_ckv = paged_write(pool_ckv, ckv_new[:, 0], block_tables, pos,
+                           active)
+    pool_kr = paged_write(pool_kr, kr_new[:, 0], block_tables, pos, active)
+    ckv_seq = paged_gather(pool_ckv, block_tables)
+    kr_seq = paged_gather(pool_kr, block_tables)
+    out = _absorbed_decode(p, cfg, qn, qr, ckv_seq, kr_seq, pos)
+    return out, pool_ckv, pool_kr

@@ -49,6 +49,14 @@ class ModelAPI:
     cache_logical: Callable
     batch_specs: Callable
     batch_logical: Callable
+    # block-paged serving (continuous batching); every family provides
+    # them.  paged_layout() maps cache leaf -> "paged" (block pool,
+    # [L, NB, bs, ...]) or "lane" ([L, max_lanes, ...] resident state);
+    # paged_decode(p, pools, tokens, block_tables, pos, active) keeps
+    # pos/tables/active host-owned so its compiled shape never changes.
+    paged_init: Callable = None
+    paged_decode: Callable = None
+    paged_layout: Callable = None
 
 
 def _token_batch_specs(cfg, shape: ShapeSpec):
@@ -91,11 +99,12 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
         def loss(p, batch):
             return TFM.loss_fn(p, cfg, batch)
 
-        def prefill(p, batch, max_seq):
+        def prefill(p, batch, max_seq, last_index=None):
             return TFM.prefill(
                 p, cfg, batch["tokens"], max_seq,
                 cache_dtype=cache_dtype_of(cfg),
-                extra_embeds=batch.get("extra_embeds"))
+                extra_embeds=batch.get("extra_embeds"),
+                last_index=last_index)
 
         def decode(p, cache, tokens):
             return TFM.decode_step(p, cfg, cache, tokens)
@@ -112,13 +121,23 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
             cache_logical=lambda: TFM.cache_specs(cfg),
             batch_specs=lambda shape: _token_batch_specs(cfg, shape),
             batch_logical=lambda: _token_batch_logical(cfg),
+            paged_init=lambda nb, bs, lanes: TFM.init_paged_pools(
+                cfg, nb, bs, lanes, cache_dtype_of(cfg)),
+            paged_decode=lambda p, pools, t, bt, pos, act:
+                TFM.decode_step_paged(p, cfg, pools, t, bt, pos, act),
+            paged_layout=lambda: TFM.paged_layout(cfg),
         )
 
     if cfg.family in ("ssm", "hybrid"):
         def loss(p, batch):
             return HYBRID.loss_fn(p, cfg, batch)
 
-        def prefill(p, batch, max_seq):
+        def prefill(p, batch, max_seq, last_index=None):
+            if last_index is not None:
+                raise ValueError(
+                    "bucketed (padded) prefill is not supported for "
+                    "ssm/hybrid: the recurrent SSM state would absorb "
+                    "pad tokens; prefill at the exact prompt length")
             return HYBRID.prefill(p, cfg, batch["tokens"], max_seq,
                                   cache_dtype=cache_dtype_of(cfg))
 
@@ -137,16 +156,21 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
             cache_logical=lambda: HYBRID.cache_specs(cfg),
             batch_specs=lambda shape: _token_batch_specs(cfg, shape),
             batch_logical=lambda: _token_batch_logical(cfg),
+            paged_init=lambda nb, bs, lanes: HYBRID.init_paged_pools(
+                cfg, nb, bs, lanes, cache_dtype_of(cfg)),
+            paged_decode=lambda p, pools, t, bt, pos, act:
+                HYBRID.decode_step_paged(p, cfg, pools, t, bt, pos, act),
+            paged_layout=lambda: HYBRID.paged_layout(cfg),
         )
 
     if cfg.family == "encdec":
         def loss(p, batch):
             return ENCDEC.loss_fn(p, cfg, batch)
 
-        def prefill(p, batch, max_seq):
+        def prefill(p, batch, max_seq, last_index=None):
             return ENCDEC.prefill(
                 p, cfg, batch["frames"], batch["tokens"], max_seq,
-                cache_dtype=cache_dtype_of(cfg))
+                cache_dtype=cache_dtype_of(cfg), last_index=last_index)
 
         def decode(p, cache, tokens):
             return ENCDEC.decode_step(p, cfg, cache, tokens)
@@ -163,6 +187,11 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
             cache_logical=lambda: ENCDEC.cache_specs(cfg),
             batch_specs=lambda shape: _token_batch_specs(cfg, shape),
             batch_logical=lambda: _token_batch_logical(cfg),
+            paged_init=lambda nb, bs, lanes: ENCDEC.init_paged_pools(
+                cfg, nb, bs, lanes, cache_dtype_of(cfg)),
+            paged_decode=lambda p, pools, t, bt, pos, act:
+                ENCDEC.decode_step_paged(p, cfg, pools, t, bt, pos, act),
+            paged_layout=lambda: ENCDEC.paged_layout(cfg),
         )
 
     raise ValueError(f"unknown family {cfg.family}")

@@ -364,13 +364,118 @@ def decode_step(p, cfg, cache, tokens):
     return logits, new_cache
 
 
+def paged_layout(cfg) -> dict:
+    """Leaf kinds for the block-paged serving cache: ``paged`` leaves are
+    [L, NB, bs, ...] block pools indexed per-lane through block tables;
+    there are no per-lane leaves for this family."""
+    if cfg.use_mla:
+        return {"ckv": "paged", "kr": "paged"}
+    return {"k": "paged", "v": "paged"}
+
+
+def init_paged_pools(cfg, num_blocks, block_size, max_lanes,
+                     dtype=jnp.bfloat16):
+    L_total = cfg.n_layers
+    del max_lanes  # no per-lane state in this family
+    if cfg.use_mla:
+        return {
+            "ckv": jnp.zeros(
+                (L_total, num_blocks, block_size, cfg.kv_lora_rank),
+                dtype),
+            "kr": jnp.zeros(
+                (L_total, num_blocks, block_size, cfg.rope_head_dim),
+                dtype),
+        }
+    return {
+        "k": jnp.zeros(
+            (L_total, num_blocks, block_size, cfg.n_kv_heads, cfg.hd),
+            dtype),
+        "v": jnp.zeros(
+            (L_total, num_blocks, block_size, cfg.n_kv_heads, cfg.hd),
+            dtype),
+    }
+
+
+def _decode_blocks_paged(stacked, cfg, x, pool_slices, block_tables, pos,
+                         active, *, moe: bool):
+    """Paged twin of ``_decode_blocks``: per-layer block pools instead of
+    per-layer lane caches; tables/pos/active are broadcast constants."""
+    if stacked is None:
+        return x, pool_slices
+
+    def body(x, inp):
+        lp, ps = inp
+        h = L.apply_norm(lp["ln1"], cfg, x)
+        if cfg.use_mla:
+            attn, ckv, kr = MLA.apply_mla_decode_paged(
+                lp["attn"], cfg, h, ps["ckv"], ps["kr"], block_tables,
+                pos, active)
+            new_ps = {"ckv": ckv, "kr": kr}
+        else:
+            attn, pk, pv = L.apply_attention_decode_paged(
+                lp["attn"], cfg, h, ps["k"], ps["v"], block_tables, pos,
+                active)
+            new_ps = {"k": pk, "v": pv}
+        x = x + attn
+        h = L.apply_norm(lp["ln2"], cfg, x)
+        if moe:
+            y, _ = MOE.apply_moe(lp["moe"], cfg, h)
+        else:
+            y = L.apply_mlp(lp["mlp"], cfg, h)
+        return x + y, new_ps
+
+    x, new_pools = jax.lax.scan(body, x, (stacked, pool_slices),
+                                unroll=cfg.scan_unroll)
+    return x, new_pools
+
+
+def decode_step_paged(p, cfg, pools, tokens, block_tables, pos, active):
+    """Block-paged decode: tokens [B,1]; block_tables [B,T] int32; pos
+    [B] int32; active [B] bool -> (logits [B,V], new pools).
+
+    ``pos``/tables/``active`` are host-owned inputs (the engine advances
+    pos and edits tables between steps), so the compiled executable's
+    shapes never depend on which requests are in flight."""
+    x = embed_tokens(p, cfg, tokens)
+    n_dense, n_moe = _layer_split(cfg)
+
+    def slices(lo, hi):
+        return {k: v[lo:hi] for k, v in pools.items()}
+
+    x, ps_dense = _decode_blocks_paged(
+        p.get("dense_layers"), cfg, x, slices(0, n_dense), block_tables,
+        pos, active, moe=False)
+    x, ps_moe = _decode_blocks_paged(
+        p.get("moe_layers"), cfg, x, slices(n_dense, cfg.n_layers),
+        block_tables, pos, active, moe=True)
+    x = L.apply_norm(p["ln_f"], cfg, x)
+    logits = logits_fn(p, cfg, x)[:, 0]
+
+    new_pools = {}
+    for k in pools:
+        parts = []
+        if ps_dense is not None and n_dense:
+            parts.append(ps_dense[k])
+        if ps_moe is not None and n_moe:
+            parts.append(ps_moe[k])
+        new_pools[k] = jnp.concatenate(parts, axis=0) if len(parts) > 1 \
+            else parts[0]
+    return logits, new_pools
+
+
 def prefill(p, cfg, tokens, max_seq, cache_dtype=jnp.bfloat16,
-            extra_embeds=None):
+            extra_embeds=None, last_index=None):
     """Run the full prompt, build the cache, return last-token logits.
 
     Structured as one forward pass (XLA-friendly) that also extracts K/V.
     For simplicity and HLO compactness we re-run QKV per layer inside the
     same scan used by ``forward`` but additionally emit cache entries.
+
+    ``last_index`` ([B] int32, optional) supports *bucketed* prefill:
+    ``tokens`` may be right-padded to a bucket length and logits are then
+    taken at each lane's last valid token instead of position -1, with
+    ``cache["pos"]`` set past it.  Pad rows land in the cache but the
+    decode mask (``kpos <= pos``) hides them until overwritten.
     """
     b, s = tokens.shape
     x = embed_tokens(p, cfg, tokens, extra_embeds)
@@ -413,7 +518,17 @@ def prefill(p, cfg, tokens, max_seq, cache_dtype=jnp.bfloat16,
                             unroll=cfg.scan_unroll)
         entries.append(e)
     x = L.apply_norm(p["ln_f"], cfg, x)
-    logits = logits_fn(p, cfg, x[:, -1:])[:, 0]
+    if last_index is None:
+        sel = x[:, -1:]
+        pos = jnp.full((b,), x.shape[1], jnp.int32)
+    else:
+        # last valid *text* token per lane; offset covers prepended
+        # patch embeds (vlm) so the gather indexes the hidden sequence
+        off = x.shape[1] - s
+        idx = (off + last_index).astype(jnp.int32)
+        sel = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        pos = idx + 1
+    logits = logits_fn(p, cfg, sel)[:, 0]
 
     for key in cache:
         if key == "pos":
@@ -421,7 +536,7 @@ def prefill(p, cfg, tokens, max_seq, cache_dtype=jnp.bfloat16,
         stacked = jnp.concatenate([e[key] for e in entries], axis=0) \
             if len(entries) > 1 else entries[0][key]
         pad_width = [(0, 0)] * stacked.ndim
-        pad_width[2] = (0, max_seq - s)
+        pad_width[2] = (0, max_seq - stacked.shape[2])
         cache[key] = jnp.pad(stacked, pad_width).astype(cache_dtype)
-    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    cache["pos"] = pos
     return logits, cache

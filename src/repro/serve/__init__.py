@@ -1,3 +1,9 @@
-from .engine import ServeEngine, Request
+from .engine import PagedServeEngine, Request, ServeEngine
+from .paged_cache import BlockAllocator, PagedKVCache
+from .scheduler import Scheduler, SchedulerConfig
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = [
+    "ServeEngine", "PagedServeEngine", "Request",
+    "PagedKVCache", "BlockAllocator",
+    "Scheduler", "SchedulerConfig",
+]

@@ -1,19 +1,37 @@
-"""Batched serving engine: slot-based continuous batching (lite).
+"""Batched serving engines: fixed-slot (lite) and block-paged continuous
+batching.
 
-The engine owns one stacked cache with ``max_slots`` batch lanes.  Incoming
-requests queue; whenever free lanes exist the waiting prompts are prefilled
-as a batch and their caches written into the free lanes
-(dynamic_update_slice on the batch axis).  Every ``step()`` decodes one
-token for ALL active lanes; finished lanes free immediately and new
-requests join without stalling the others — continuous batching.
+``ServeEngine`` is the original slot engine: one stacked cache with
+``max_slots`` batch lanes, prompts prefilled at ``max_seq`` and copied
+into free lanes.  It stays as the comparison baseline (and the simplest
+correct thing).
 
-Every GEMM in the serving path (projections, MLP, decode attention, lm
-head) routes through ``kernels.planned``: ``load()`` traces the decode
-step once, so each GEMM shape is planned (``best_plan`` -> LRU plan cache)
-and AOT-compiled *before* traffic arrives, and every subsequent ``step()``
-reuses that executable — zero re-planning, zero re-compilation mid-flight.
-``plan_report`` holds the per-call-site planning snapshot taken at load
-time for introspection (which serving GEMMs run mapper-planned tiles).
+``PagedServeEngine`` replaces the fixed-slot admit/free model with
+continuous batching over a block-paged KV cache (``paged_cache``):
+
+  * K/V lives in fixed-size blocks on the sequence axis; each request
+    holds a host-side block table.  Admit/evict/grow is a host table
+    edit — the AOT-compiled decode executable takes static-shape
+    (tokens, block_tables, pos, active) inputs and is compiled exactly
+    once in ``load()``; joining or finishing a request can never
+    recompile it (``jax.jit(...).lower(...).compile()`` executables
+    *error* on shape mismatch rather than retrace).
+  * Prefills are bucketed (``scheduler``): prompts pad to the next
+    bucket length so the jitted prefill compiles once per bucket, and
+    the scheduler packs at most a few prefills into steps where decode
+    lanes sit idle instead of stalling all in-flight decodes behind a
+    burst.
+  * When the block pool runs dry mid-flight, the youngest active
+    request is preempted: its blocks free instantly, it re-queues with
+    its generated tokens folded into the prompt, and recomputes on
+    re-admission (output-transparent — same context, same greedy
+    tokens).
+
+Every GEMM in both serving paths routes through ``kernels.planned``;
+``load()`` traces/compiles up front and ``plan_report`` holds a *true
+delta* of the planning decisions that warmup made (every counter —
+planned/fallback, backends, autotune hit/miss, shapes — is delta'd
+against the process-global report).
 
 Greedy sampling (argmax); temperature hooks included but the engine is a
 systems artifact, not a quality one.
@@ -22,7 +40,6 @@ systems artifact, not a quality one.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +50,9 @@ from repro.core import autotune
 from repro.kernels import planned
 from repro.models import build_model
 
+from .paged_cache import PagedKVCache
+from .scheduler import Scheduler, SchedulerConfig
+
 
 @dataclasses.dataclass
 class Request:
@@ -42,6 +62,28 @@ class Request:
     extra: dict | None = None    # frames / patch embeds for audio/vlm
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+
+
+def _validate_request(prompt, max_new_tokens: int, max_seq: int,
+                      extra_rows: int = 0) -> None:
+    """Reject requests that would run past the sequence horizon.
+
+    ``decode_step`` advances ``pos`` unconditionally and the cache write
+    (``dynamic_update_slice``) clamps at ``max_seq`` — an overlong
+    request would silently overwrite the last cache row in place
+    instead of failing.  Refuse it at submit time."""
+    if max_new_tokens < 1:
+        raise ValueError(f"max_new_tokens must be >= 1, got "
+                         f"{max_new_tokens}")
+    total = extra_rows + len(prompt) + max_new_tokens
+    if total > max_seq:
+        raise ValueError(
+            f"request needs {total} cache rows (prompt {len(prompt)}"
+            f"{f' + {extra_rows} extra' if extra_rows else ''} + "
+            f"max_new_tokens {max_new_tokens}) > max_seq {max_seq}: "
+            "the decode write would silently clamp at the horizon, "
+            "overwriting the last cache row; raise max_seq or shorten "
+            "the request")
 
 
 class ServeEngine:
@@ -75,12 +117,14 @@ class ServeEngine:
         then replays the compiled executable — no per-step re-planning.
         If ``prompt_len`` was given, the prefill GEMM shapes are planned
         ahead as well (abstract trace, no FLOPs).  ``plan_report`` keeps
-        only the decisions *this warmup* made (a delta against the
-        process-global report, so earlier unrelated traces don't leak in),
-        and ``autotune_report`` the crossover-table traffic of the same
-        window: table hits/misses and — the invariant the tests pin —
-        ``measure_calls == 0``, because serve-time planning only *reads*
-        the committed table, it never races backends.
+        only the decisions *this warmup* made — a true delta against the
+        process-global report, every counter included (planned/fallback,
+        per-backend, autotune hit/miss, per-shape), so earlier unrelated
+        traces don't leak in.  ``autotune_report`` is the crossover-table
+        traffic of the same window: table hits/misses and — the invariant
+        the tests pin — ``measure_calls == 0``, because serve-time
+        planning only *reads* the committed table, it never races
+        backends.
 
         If the engine was constructed with a ``PlanPolicy``, the warmup
         trace runs under it (``planned.override``); otherwise whatever
@@ -88,10 +132,7 @@ class ServeEngine:
         """
         self.params = params
         self.cache = self.api.init_cache(self.max_slots, self.max_seq)
-        before = {
-            site: (st["planned"], st["fallback"])
-            for site, st in planned.planned_report().items()
-        }
+        before = planned.planned_report()
         tune0 = autotune.counters()
         with planned.override(policy=self.policy):
             tokens0 = jnp.zeros((self.max_slots, 1), jnp.int32)
@@ -101,15 +142,8 @@ class ServeEngine:
                 jax.eval_shape(
                     lambda p, b: self.api.prefill(p, b, self.max_seq),
                     params, self._prefill_spec())
-        delta = {}
-        for site, st in planned.planned_report().items():
-            done_planned, done_fallback = before.get(site, (0, 0))
-            d_planned = st["planned"] - done_planned
-            d_fallback = st["fallback"] - done_fallback
-            if d_planned or d_fallback:
-                delta[site] = dict(
-                    st, planned=d_planned, fallback=d_fallback)
-        self.plan_report = delta
+        self.plan_report = planned.report_delta(
+            before, planned.planned_report())
         tune1 = autotune.counters()
         self.autotune_report = {k: tune1[k] - tune0[k] for k in tune1}
 
@@ -127,12 +161,19 @@ class ServeEngine:
                 (1, self.cfg.enc_frames, self.cfg.d_model), jnp.bfloat16)
         return spec
 
+    def _extra_rows(self, extra: dict | None) -> int:
+        if extra and self.cfg.family == "vlm" and "extra_embeds" in extra:
+            return self.cfg.vlm_patches
+        return 0
+
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                extra: dict | None = None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        _validate_request(prompt, max_new_tokens, self.max_seq,
+                          self._extra_rows(extra))
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                  max_new_tokens, extra))
+        self.queue.append(Request(rid, prompt, max_new_tokens, extra))
         return rid
 
     # -- internals ----------------------------------------------------------
@@ -169,16 +210,23 @@ class ServeEngine:
     def _admit(self):
         free = self._free_slots()
         while free and self.queue:
-            lane = free.pop(0)
             req = self.queue.pop(0)
             batch = {"tokens": jnp.asarray(req.prompt[None])}
             if req.extra:
                 batch.update(
                     {k: jnp.asarray(v[None]) for k, v in req.extra.items()})
             logits, pc = self.api.prefill(self.params, batch, self.max_seq)
-            self._write_lane(lane, pc)
             first = int(jnp.argmax(logits[0]))
             req.output.append(first)
+            if len(req.output) >= req.max_new_tokens:
+                # the prefill token already satisfied the request: it
+                # finishes at admit time and never occupies a lane (a
+                # decode step would emit a second token past the budget)
+                req.done = True
+                self.finished.append(req)
+                continue
+            lane = free.pop(0)
+            self._write_lane(lane, pc)
             self.slots[lane] = req
 
     def step(self) -> int:
@@ -187,7 +235,7 @@ class ServeEngine:
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
-            return 0
+            return len(self.queue)
         tokens = np.zeros((self.max_slots, 1), np.int32)
         for i in active:
             tokens[i, 0] = self.slots[i].output[-1]
@@ -203,6 +251,284 @@ class ServeEngine:
                 self.finished.append(req)
                 self.slots[i] = None
         return sum(s is not None for s in self.slots) + len(self.queue)
+
+    def run_until_drained(self, max_steps: int = 1000) -> list[Request]:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break
+        return self.finished
+
+
+class PagedServeEngine:
+    """Continuous-batching engine over a block-paged KV cache.
+
+    ``max_lanes`` bounds concurrent requests (the decode batch width),
+    ``max_seq`` the per-request horizon, ``block_size`` the KV block
+    granularity, ``num_blocks`` the shared pool size (default: enough
+    for every lane at full horizon — shrink it to oversubscribe and
+    exercise preemption).  ``stats`` tracks ``decode_compiles`` (pinned
+    at 1 by the tests), ``prefill_compiles`` (one per bucket),
+    ``preemptions`` and ``steps``.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, max_lanes: int = 4,
+                 max_seq: int = 512, block_size: int = 16,
+                 num_blocks: int | None = None,
+                 prompt_len: int | None = None,
+                 policy: autotune.PlanPolicy | None = None,
+                 scheduler: Scheduler | SchedulerConfig | None = None):
+        self.cfg = cfg
+        self.policy = policy
+        self.api = build_model(cfg)
+        if self.api.paged_decode is None:
+            raise ValueError(
+                f"family {cfg.family!r} has no paged decode path")
+        self.max_lanes = max_lanes
+        self.max_seq = max_seq
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.prompt_len = prompt_len
+        if isinstance(scheduler, SchedulerConfig):
+            scheduler = Scheduler(scheduler)
+        self.scheduler = scheduler or Scheduler()
+        # bucket pads are invisible to masked attention, but not to every
+        # family: recurrent prompt state (ssm/hybrid) absorbs pad tokens,
+        # and capacity-limited MoE routing lets pads compete with real
+        # tokens for expert slots — both would change outputs.  those
+        # families prefill at exact lengths; dense/vlm/encdec bucket.
+        self._exact_prefill = cfg.family in ("ssm", "hybrid", "moe")
+        self.params = None
+        self.kv: PagedKVCache | None = None
+        self.lanes: list[Request | None] = [None] * max_lanes
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._next_rid = 0
+        self._admit_seq = 0
+        self._lane_seq: dict[int, int] = {}
+        self._prefill_fns: dict = {}
+        self._decode_exec = None
+        self.plan_report: dict = {}
+        self.autotune_report: dict = {}
+        self.stats = {"decode_compiles": 0, "prefill_compiles": 0,
+                      "preemptions": 0, "steps": 0}
+
+    # -- load ---------------------------------------------------------------
+    def load(self, params):
+        """Install weights, build the block pools, and AOT-compile the
+        decode executable — exactly once.
+
+        The executable's inputs are all static-shape: tokens
+        [max_lanes,1], block_tables [max_lanes, max_seq/block_size],
+        pos [max_lanes], active [max_lanes].  Admit/evict/grow edit the
+        host-side tables only, so nothing that happens in flight can
+        change the compiled shapes — a ``Compiled`` object *errors* on
+        aval mismatch instead of retracing, which makes "zero decode
+        recompiles" structural rather than aspirational.
+
+        ``plan_report`` / ``autotune_report`` are true deltas of the
+        warmup window, as in ``ServeEngine.load``.  If ``prompt_len``
+        was given, the bucketed prefill for that length is plan-warmed
+        abstractly (no FLOPs).
+        """
+        self.params = params
+        self.kv = PagedKVCache(
+            self.api, max_lanes=self.max_lanes, max_seq=self.max_seq,
+            block_size=self.block_size, num_blocks=self.num_blocks)
+        self.num_blocks = self.kv.num_blocks
+        before = planned.planned_report()
+        tune0 = autotune.counters()
+        with planned.override(policy=self.policy):
+            decode_jit = jax.jit(
+                lambda p, pools, t, bt, pos, act:
+                self.api.paged_decode(p, pools, t, bt, pos, act))
+            tokens0 = jnp.zeros((self.max_lanes, 1), jnp.int32)
+            bt0, pos0, act0 = self.kv.device_args()
+            self._decode_exec = decode_jit.lower(
+                params, self.kv.pools, tokens0, bt0, pos0, act0).compile()
+            self.stats["decode_compiles"] += 1
+            if self.prompt_len:
+                bucket = self.scheduler.bucket_for(
+                    self.prompt_len, exact=self._exact_prefill)
+                li = None if self._exact_prefill else \
+                    jax.ShapeDtypeStruct((1,), jnp.int32)
+                spec = {"tokens": jax.ShapeDtypeStruct(
+                    (1, bucket), jnp.int32)}
+                if self.cfg.family == "encdec":
+                    spec["frames"] = jax.ShapeDtypeStruct(
+                        (1, self.cfg.enc_frames, self.cfg.d_model),
+                        jnp.bfloat16)
+                if li is None:
+                    jax.eval_shape(
+                        lambda p, b: self.api.prefill(p, b, bucket),
+                        params, spec)
+                else:
+                    jax.eval_shape(
+                        lambda p, b, i: self.api.prefill(
+                            p, b, bucket, last_index=i),
+                        params, spec, li)
+        self.plan_report = planned.report_delta(
+            before, planned.planned_report())
+        tune1 = autotune.counters()
+        self.autotune_report = {k: tune1[k] - tune0[k] for k in tune1}
+
+    # -- submit -------------------------------------------------------------
+    def _extra_rows(self, extra: dict | None) -> int:
+        if extra and self.cfg.family == "vlm" and "extra_embeds" in extra:
+            return self.cfg.vlm_patches
+        return 0
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               extra: dict | None = None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        _validate_request(prompt, max_new_tokens, self.max_seq,
+                          self._extra_rows(extra))
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, prompt, max_new_tokens, extra))
+        return rid
+
+    # -- admission ----------------------------------------------------------
+    def _effective_prompt(self, req: Request) -> np.ndarray:
+        """Prompt plus already-generated tokens: a preempted request
+        re-prefills its full context and continues where it left off."""
+        if not req.output:
+            return req.prompt
+        return np.concatenate(
+            [req.prompt, np.asarray(req.output, np.int32)])
+
+    def _prefill_fn(self, rows: int, batch_keys: tuple, use_li: bool):
+        """Jitted prefill producing a ``rows``-deep cache (= bucket
+        length, plus patch rows for vlm) — one compile per bucket."""
+        key = (rows, batch_keys, use_li)
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+            if use_li:
+                fn = jax.jit(lambda p, b, li: self.api.prefill(
+                    p, b, rows, last_index=li))
+            else:
+                fn = jax.jit(lambda p, b: self.api.prefill(p, b, rows))
+            self._prefill_fns[key] = fn
+            self.stats["prefill_compiles"] += 1
+        return fn
+
+    def _admit_one(self, req: Request, lane: int) -> None:
+        eff = self._effective_prompt(req)
+        plen = len(eff)
+        extra_rows = self._extra_rows(req.extra)
+        bucket = self.scheduler.bucket_for(plen, exact=self._exact_prefill)
+        blocks = self.kv.allocator.alloc(
+            self.kv.blocks_for(extra_rows + plen))
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :plen] = eff
+        batch = {"tokens": jnp.asarray(tokens)}
+        if req.extra:
+            batch.update(
+                {k: jnp.asarray(v[None]) for k, v in req.extra.items()})
+        use_li = not self._exact_prefill
+        fn = self._prefill_fn(
+            bucket + extra_rows, tuple(sorted(batch)), use_li)
+        if use_li:
+            logits, pc = fn(self.params, batch,
+                            jnp.asarray([plen - 1], jnp.int32))
+        else:
+            logits, pc = fn(self.params, batch)
+        req.output.append(int(jnp.argmax(logits[0])))
+        if len(req.output) >= req.max_new_tokens:
+            # admit-time done check: the prefill token satisfied the
+            # budget — finish without ever occupying a lane
+            req.done = True
+            self.finished.append(req)
+            self.kv.allocator.release(blocks)
+            return
+        self.kv.install_lane(lane, blocks, extra_rows + plen)
+        self.kv.write_prefill(lane, pc)
+        self.lanes[lane] = req
+        self._lane_seq[lane] = self._admit_seq
+        self._admit_seq += 1
+
+    def _admit(self) -> None:
+        while self.queue:
+            free = [i for i, r in enumerate(self.lanes) if r is None]
+            n_active = self.max_lanes - len(free)
+            needs = [
+                self.kv.blocks_for(
+                    self._extra_rows(r.extra)
+                    + len(self._effective_prompt(r)))
+                for r in self.queue
+            ]
+            n = self.scheduler.plan_admits(
+                needs, free_lanes=len(free),
+                free_blocks=self.kv.free_blocks(), n_active=n_active)
+            if n == 0:
+                return
+            for _ in range(n):
+                req = self.queue.pop(0)
+                self._admit_one(req, free.pop(0))
+            # a request finishing at admit time frees its lane again:
+            # loop so the scheduler can top the step up
+            if all(r is not None for r in self.lanes):
+                return
+
+    # -- preemption ---------------------------------------------------------
+    def _preempt(self, lane: int) -> None:
+        req = self.lanes[lane]
+        self.kv.release_lane(lane)
+        self.lanes[lane] = None
+        self._lane_seq.pop(lane, None)
+        self.queue.insert(0, req)
+        self.stats["preemptions"] += 1
+
+    def _ensure_capacity(self) -> None:
+        """Before a decode step: every active lane's next write must fit
+        its allocated blocks.  Grow by one block on demand; when the
+        pool is dry, preempt the *youngest* active lane (its recompute
+        loss is smallest) and retry.  The growing lane itself is only
+        preempted when it is the sole active lane left."""
+        for lane in range(self.max_lanes):
+            while (self.lanes[lane] is not None
+                   and int(self.kv.pos[lane])
+                   >= self.kv.lane_capacity(lane)):
+                if self.kv.free_blocks() > 0:
+                    self.kv.grow_lane(lane, self.kv.allocator.alloc(1)[0])
+                    continue
+                victims = sorted(
+                    (i for i, r in enumerate(self.lanes)
+                     if r is not None and i != lane),
+                    key=lambda i: self._lane_seq.get(i, 0))
+                victim = victims[-1] if victims else lane
+                self._preempt(victim)
+                if victim == lane:
+                    break
+
+    # -- step ---------------------------------------------------------------
+    def step(self) -> int:
+        """Admit + one decode step for all active lanes.  Returns active
+        request count after the step plus the queue backlog."""
+        self._admit()
+        self._ensure_capacity()
+        active = [i for i, r in enumerate(self.lanes) if r is not None]
+        if not active:
+            return len(self.queue)
+        self.kv.guard_decode_write()
+        tokens = np.zeros((self.max_lanes, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.lanes[i].output[-1]
+        bt, pos, act = self.kv.device_args()
+        logits, self.kv.pools = self._decode_exec(
+            self.params, self.kv.pools, jnp.asarray(tokens), bt, pos, act)
+        self.stats["steps"] += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in active:
+            req = self.lanes[i]
+            req.output.append(int(nxt[i]))
+            self.kv.pos[i] += 1
+            if len(req.output) >= req.max_new_tokens:
+                req.done = True
+                self.finished.append(req)
+                self.kv.release_lane(i)
+                self.lanes[i] = None
+                self._lane_seq.pop(i, None)
+        return sum(r is not None for r in self.lanes) + len(self.queue)
 
     def run_until_drained(self, max_steps: int = 1000) -> list[Request]:
         for _ in range(max_steps):

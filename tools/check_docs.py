@@ -23,6 +23,12 @@ Three checks, so the docs cannot silently rot as the code grows:
    appear in docs/fusion.md (the chain IR / legality / spec-author
    guide) — a newly fused-capable spec has to document which chains it
    joins.
+6. **Serving coverage**: docs/serving.md must exist and document the
+   paged serving surface (``PagedServeEngine``, ``PagedKVCache``, the
+   ``Scheduler``, the block table, the AOT zero-recompile invariant and
+   the ``bench_serving`` load generator), and docs/architecture.md must
+   mention ``PagedServeEngine`` — the serving engine cannot change
+   undocumented.
 
     python tools/check_docs.py          # exits non-zero on any failure
 """
@@ -40,6 +46,9 @@ ARCHITECTURE = ROOT / "docs" / "architecture.md"
 SYSTOLIC_DOC = ROOT / "docs" / "systolic.md"
 AUTOTUNE_DOC = ROOT / "docs" / "autotune.md"
 FUSION_DOC = ROOT / "docs" / "fusion.md"
+SERVING_DOC = ROOT / "docs" / "serving.md"
+SERVING_TERMS = ("PagedServeEngine", "PagedKVCache", "Scheduler",
+                 "block table", "bench_serving", "AOT")
 PLAN_MODES = ("modelled", "cached", "measured")
 
 # [text](target) — excluding images handled the same way is fine too
@@ -217,13 +226,33 @@ def check_autotune_docs() -> list[str]:
     return errors
 
 
+def check_serving_docs() -> list[str]:
+    if not SERVING_DOC.exists():
+        return ["docs/serving.md missing (serving coverage check)"]
+    errors = []
+    text = SERVING_DOC.read_text(encoding="utf-8")
+    for term in SERVING_TERMS:
+        if term not in text:
+            errors.append(
+                f"docs/serving.md: {term!r} is not documented (paged "
+                "serving surface)")
+    if ARCHITECTURE.exists():
+        arch = ARCHITECTURE.read_text(encoding="utf-8")
+        if "PagedServeEngine" not in arch:
+            errors.append(
+                "docs/architecture.md: PagedServeEngine (the "
+                "continuous-batching serving engine) is not documented")
+    return errors
+
+
 def main() -> int:
     names = registered_names()
     hooked = systolic_hooked_names()
     capable = fused_capable_names()
     errors = (check_links() + check_registry_coverage(names)
               + check_systolic_coverage(hooked)
-              + check_fusion_coverage(capable) + check_autotune_docs())
+              + check_fusion_coverage(capable) + check_autotune_docs()
+              + check_serving_docs())
     for e in errors:
         print(f"FAIL {e}")
     n_links = sum(

@@ -1,6 +1,6 @@
 #!/usr/bin/env python
 """Bench-regression gate: compare a fresh ``benchmarks/run.py --ci`` JSON
-against the committed baseline (``benchmarks/BENCH_PR7.json``).
+against the committed baseline (``benchmarks/BENCH_PR8.json``).
 
 Timings from different machines are not comparable raw, so the gate is
 *machine-normalized*: it computes the per-spec ratio new/baseline, takes
@@ -29,7 +29,22 @@ deterministically as well:
   * fused vs unfused timings come from the *same* fresh run, so no
     machine normalization applies: ``speedup`` must stay > 1.0.
 
-    python tools/compare_bench.py benchmarks/BENCH_PR7.json BENCH_NEW.json
+The ``serving`` section (paged vs slot engine at one smoke arrival
+rate, schema 4) gates:
+
+  * an engine row present in the baseline may not go missing;
+  * ``decode_recompiles`` may not grow (the paged engine's AOT decode
+    invariant: joins/evictions edit host tables, never shapes — any
+    growth means something started retracing in flight);
+  * ``preemptions`` may not grow (the smoke pool is not oversubscribed,
+    so a preemption means admission started over-allocating);
+  * p99 latency is machine-normalized by the spec-suite median factor
+    and fails beyond ``--tolerance`` (default 2x), like spec timings;
+  * both engines serve the same seeded stream in the same fresh run, so
+    the ordering gates raw: paged ``tokens_per_sec`` must stay strictly
+    above slot's (the continuous-batching win is the point of the row).
+
+    python tools/compare_bench.py benchmarks/BENCH_PR8.json BENCH_NEW.json
 
 Exit code 0 = within tolerance, 1 = regression.  Dependency-free.
 """
@@ -85,6 +100,7 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
         if b.get("us_per_call", 0) > 0:
             ratios[name] = n["us_per_call"] / b["us_per_call"]
 
+    med = 1.0
     if ratios:
         med = _median(list(ratios.values()))
         print(f"machine-speed factor (median new/baseline): {med:.2f}x")
@@ -101,6 +117,52 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
                     f"{name}: {rel:.2f}x slower than the suite median "
                     f"(tolerance {tolerance:.1f}x)")
     errors += compare_chains(baseline, fresh)
+    errors += compare_serving(baseline, fresh, med, tolerance)
+    return errors
+
+
+def compare_serving(baseline: dict, fresh: dict, machine_factor: float,
+                    tolerance: float) -> list[str]:
+    """Gates for the serving rows (docstring above)."""
+    errors: list[str] = []
+    base = baseline.get("serving", {})
+    new = fresh.get("serving", {})
+    for kind in sorted(set(base) - set(new)):
+        errors.append(
+            f"serving {kind}: in baseline but missing from fresh run")
+    for kind in sorted(set(base) & set(new)):
+        b, n = base[kind], new[kind]
+        print(f"  serving {kind:5s} tok/s={n.get('tokens_per_sec', 0):8.2f} "
+              f"p99={n.get('p99_ms', 0):8.1f}ms "
+              f"preempt={n.get('preemptions', 0)} "
+              f"recompiles={n.get('decode_recompiles', 0)}")
+        if n.get("decode_recompiles", 0) > b.get("decode_recompiles", 0):
+            errors.append(
+                f"serving {kind}: decode recompiles grew "
+                f"{b.get('decode_recompiles')} -> "
+                f"{n.get('decode_recompiles')} — in-flight joins/"
+                "evictions must never retrace the AOT decode executable")
+        if n.get("preemptions", 0) > b.get("preemptions", 0):
+            errors.append(
+                f"serving {kind}: preemptions grew "
+                f"{b.get('preemptions')} -> {n.get('preemptions')} on a "
+                "pool that is not oversubscribed")
+        if b.get("p99_ms", 0) > 0:
+            rel = (n.get("p99_ms", 0) / b["p99_ms"]) / max(
+                machine_factor, 1e-9)
+            if rel > tolerance:
+                errors.append(
+                    f"serving {kind}: p99 latency {rel:.2f}x the "
+                    f"machine-normalized baseline (tolerance "
+                    f"{tolerance:.1f}x)")
+    if "paged" in new and "slot" in new:
+        pt = new["paged"].get("tokens_per_sec", 0)
+        st = new["slot"].get("tokens_per_sec", 0)
+        if pt <= st:
+            errors.append(
+                f"serving: paged throughput {pt} tok/s no longer beats "
+                f"the slot engine's {st} tok/s on the same request "
+                "stream (same-run comparison, no normalization applies)")
     return errors
 
 
@@ -152,7 +214,7 @@ def compare_chains(baseline: dict, fresh: dict) -> list[str]:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("baseline", help="committed BENCH_PR7.json")
+    ap.add_argument("baseline", help="committed BENCH_PR8.json")
     ap.add_argument("fresh", help="fresh run.py --ci output")
     ap.add_argument("--tolerance", type=float, default=2.0,
                     help="allowed per-spec slowdown relative to the "
