@@ -12,11 +12,15 @@ the fused single-launch execution against the same stages as separate
 launches with the intermediate forced through HBM.  Planning consults
 the committed autotune crossover table under ``PlanPolicy(mode="cached")``
 — each row records which measured backend won and whether the table was
-hit — and execution dispatches to that winner.  CI compares the fresh
-file against the committed ``benchmarks/BENCH_PR8.json`` baseline with
+hit — and execution dispatches to that winner.  Schema 5 adds
+**hierarchical rows**: each serving GEMM case planned under the
+two-level serving target vs the flat single-mesh plan, with the
+modelled outer collective bytes gated exactly.  CI compares the fresh
+file against the committed ``benchmarks/BENCH_PR9.json`` baseline with
 ``tools/compare_bench.py`` (ratios are machine-normalized, so only real
 >2x per-spec regressions fail the gate; a fused chain case flipping
-back to unfused, or growing HBM round trips, fails deterministically).
+back to unfused, a hierarchical row flipping back to flat, growing HBM
+round trips or outer collective bytes fail deterministically).
 
     PYTHONPATH=src python benchmarks/run.py --ci --out BENCH_NEW.json
 """
@@ -115,17 +119,22 @@ def ci_bench(out_path: str) -> dict:
               f"misses={specs_out[spec.name]['plan_cache_misses']} "
               f"replan_hits={specs_out[spec.name]['replan_hits']}")
     chains_out = _ci_bench_chains(target, policy, rng)
+    hierarchy_out = _ci_bench_hierarchy(policy, rng)
     serving_out = _ci_bench_serving()
     payload = {
-        "schema": 4,
+        "schema": 5,
         "note": ("per-spec smoke timings (interpret mode, autotuned "
                  "backend) + plan-cache/autotune counters + HBM "
                  "round-trip counts, plus fused-chain rows (fused vs "
-                 "unfused stage launches) and serving rows (paged vs "
-                 "slot engine at one smoke arrival rate); compare with "
-                 "tools/compare_bench.py, never raw across machines"),
+                 "unfused stage launches), hierarchical rows (two-level "
+                 "serving GEMMs vs the flat single-mesh plan: outer "
+                 "collective bytes gate exactly) and serving rows "
+                 "(paged vs slot engine at one smoke arrival rate); "
+                 "compare with tools/compare_bench.py, never raw "
+                 "across machines"),
         "specs": specs_out,
         "chains": chains_out,
+        "hierarchy": hierarchy_out,
         "serving": serving_out,
     }
     with open(out_path, "w", encoding="utf-8") as f:
@@ -240,6 +249,82 @@ def _ci_bench_chains(target, policy, rng) -> dict:
     return out
 
 
+#: Hierarchical gate cases: serving GEMM shapes the committed table
+#: covers under the serving hierarchical target's outer|mesh keys.
+CI_HIERARCHY_CASES = (
+    ("mm", (24, 128, 64), "float32"),
+    ("bmm", (8, 12, 16, 12), "float32"),
+)
+
+
+def _ci_bench_hierarchy(policy, rng) -> dict:
+    """Two-level serving-GEMM rows vs the flat single-mesh plan.
+
+    Each case plans the same recurrence twice — under
+    ``SERVING_HIERARCHICAL_TARGET`` (outer ``(dp, tp)`` Megatron split x
+    inner chip mesh) and under the flat inner-mesh ``Target`` — then
+    times both lowered executions.  ``outer_collective_bytes`` is the
+    plan's modelled outer traffic (the ring identities in
+    ``parallel/collectives.py``), fully deterministic, so the gate pins
+    it exactly: growth means the planner picked a worse outer split.
+    ``hierarchical`` records that planning actually produced a
+    two-level plan — a flip back to flat is a routing regression.
+    """
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.core import SERVING_HIERARCHICAL_TARGET, Target, best_plan
+    from repro.core.codegen import lower_plan
+    from repro.kernels import registry
+
+    ht = SERVING_HIERARCHICAL_TARGET
+    flat = Target(name="flat_chip", mesh_shape=ht.mesh_shape)
+    out: dict = {}
+    for kind, bargs, dtype in CI_HIERARCHY_CASES:
+        spec = registry.get(kind)
+        rec = spec.builder(*bargs, dtype)
+        plan = best_plan(rec, ht, policy=policy)
+        fplan = best_plan(rec, flat, policy=policy)
+        # under jit-free CI timing the traceable compositions race;
+        # chip backends need dp*tp disjoint inner meshes (not on CI)
+        backend = plan.backend if plan.backend in ("xla", "pallas") else "xla"
+        fbackend = (fplan.backend if fplan.backend in ("xla", "pallas")
+                    else "xla")
+        fn = lower_plan(plan, backend=backend)
+        ffn = lower_plan(fplan, backend=fbackend)
+        operands = spec.operands(rec, rng)
+
+        def timed(f):
+            jnp.asarray(f(*operands)).block_until_ready()  # compile
+            reps = 3
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jnp.asarray(f(*operands)).block_until_ready()
+            return (time.perf_counter() - t0) / reps * 1e6
+
+        us, flat_us = timed(fn), timed(ffn)
+        row = {
+            "dtype": dtype,
+            "hierarchical": hasattr(plan, "outer_split"),
+            "outer_split": getattr(plan, "outer_split", None),
+            "backend": backend,
+            "autotune_hit": plan.provenance == "measured",
+            "outer_collective_bytes": int(getattr(plan, "outer_bytes", 0)),
+            "us_per_call": round(us, 1),
+            "flat_backend": fbackend,
+            "flat_us_per_call": round(flat_us, 1),
+        }
+        out[kind] = row
+        print(f"ci-bench hier {kind:6s} {dtype:8s} "
+              f"split={row['outer_split']} "
+              f"bytes={row['outer_collective_bytes']} "
+              f"hier={us:8.1f}us flat={flat_us:8.1f}us "
+              f"backend={backend}"
+              f"[{'hit' if row['autotune_hit'] else 'miss'}]")
+    return out
+
+
 #: Serving smoke workload: one arrival rate, both engines, identical
 #: seeded request stream.  Chosen so the queue actually builds (the
 #: paged engine's bucketed-prefill advantage is visible) without
@@ -297,7 +382,7 @@ def main() -> None:
                          "smoke timings + plan-cache counters as JSON")
     ap.add_argument("--out", default="BENCH_NEW.json",
                     help="output path for --ci (pass "
-                         "benchmarks/BENCH_PR8.json explicitly when "
+                         "benchmarks/BENCH_PR9.json explicitly when "
                          "refreshing the committed baseline)")
     args = ap.parse_args()
     if args.ci:

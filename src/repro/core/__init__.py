@@ -8,6 +8,7 @@ Pipeline (paper §III-IV):
     mapper.py      — search + cost model -> ExecutionPlan
     autotune.py    — measured backend crossover table (PlanPolicy)
     codegen.py     — ExecutionPlan -> JAX callable (pallas/xla/systolic)
+    hierarchy.py   — two-level plans: outer (dp, tp) mesh x inner chip
     roofline.py    — 3-term roofline from compiled HLO
 """
 
@@ -37,6 +38,12 @@ from .plio import (
 from .mapper import AIE_TARGET, ExecutionPlan, Target, best_plan, map_recurrence
 from .autotune import PlanPolicy, PlanRequest
 from .codegen import lower_plan
+from .hierarchy import (
+    SERVING_HIERARCHICAL_TARGET,
+    HierarchicalPlan,
+    HierarchicalTarget,
+    HierarchyError,
+)
 
 __all__ = [
     "Access", "Dependence", "UniformRecurrence",
@@ -50,4 +57,6 @@ __all__ = [
     "Target", "AIE_TARGET", "ExecutionPlan", "map_recurrence", "best_plan",
     "PlanPolicy", "PlanRequest",
     "lower_plan",
+    "HierarchicalTarget", "HierarchicalPlan", "HierarchyError",
+    "SERVING_HIERARCHICAL_TARGET",
 ]

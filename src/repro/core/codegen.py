@@ -77,7 +77,15 @@ def lower_plan(
     interpret: bool | None = None,
 ) -> Callable:
     from . import fusion  # late: fusion imports mapper imports nothing here
+    from . import hierarchy  # late: hierarchy lowers groups through here
 
+    if isinstance(plan, hierarchy.HierarchicalPlan):
+        # two-level plans compose the outer split at host/trace level and
+        # re-enter lower_plan per group for the inner schedule; the outer
+        # composition builds its own per-group meshes, so ``mesh`` is
+        # ignored (see core/hierarchy.py: nested shard_map is illegal)
+        return hierarchy.lower_hierarchical(
+            plan, backend=backend, mesh=mesh, interpret=interpret)
     if isinstance(plan, fusion.FusedPlan):
         # fused chains dispatch through the consumer spec's
         # fused_systolic_lowering hook / the single-launch composition

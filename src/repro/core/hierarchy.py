@@ -1,0 +1,552 @@
+"""Hierarchical two-level plans: outer (dp, tp) mesh x inner systolic chip.
+
+The mapper plans one chip-level mesh; this module composes a Megatron-
+style outer data/tensor-parallel mesh *above* it, so a single
+``best_plan(rec, HierarchicalTarget(...), policy=...)`` call jointly
+optimizes both levels:
+
+  * the **outer partition** splits the recurrence across ``dp * tp``
+    groups — column/row-parallel GEMM splits for mm/bmm (the Megatron
+    duals: concat-over-N vs sum-over-K), halo-sharded overlapping row
+    tiles for the single-sweep star stencils;
+  * each group's **sub-recurrence** lowers through the unchanged
+    ``mapper.best_plan`` path onto the inner Cannon/halo schedules, so
+    the chip-level machinery (PLIO congestion, partition search, the
+    autotune crossover table) is reused verbatim one level down;
+  * candidates are ranked by a **combined cost**: outer collective
+    wire bytes (ring all-gather / all-reduce / halo exchange — the byte
+    models live in ``parallel/collectives.py``) over the outer
+    interconnect, plus the inner roofline time, with the inner PLIO
+    peak congestion as the tie-break.
+
+Legality failures raise ``HierarchyError`` with a machine-checkable
+``reason`` (mirroring ``fusion.FusionError``):
+
+  ``unsupported``               recurrence family has no outer split
+                                (conv/fir/fft/mttkrp chains stay flat)
+  ``flow``                      jacobi2d_ms: the sweep-loop flow dep
+                                would need per-sweep inter-tile halos
+  ``outer-divisibility``        no outer split divides the extents
+  ``halo-exceeds-outer-shard``  stencil radius wider than an outer tile
+
+Execution (``lower_hierarchical``) does NOT nest ``shard_map`` — jax
+rejects a manual axis inside another manual region.  Instead the outer
+level is a *composition*: for the traceable backends (xla/pallas) the
+operands are split with static slices, each group runs the inner
+lowering, and the results concat/sum back — fully jittable, which is
+what lets serving GEMMs run hierarchically inside the AOT-compiled
+decode step.  For the chip backends (systolic/allgather) each group
+gets its own disjoint (R, C) device block and the inner shard_map
+schedule runs per group, unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import TYPE_CHECKING, Callable
+
+from .mapper import ExecutionPlan, Target, best_plan
+from .partition import DTYPE_BYTES
+from .plio import congestion_scalar
+from .recurrence import UniformRecurrence, stencil_star
+from .roofline import collective_time_s
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    pass
+
+#: Recurrence families with a defined outer split.
+SPLITTABLE = ("mm", "bmm", "jacobi2d", "jacobi2d_9pt")
+
+#: Outer-split modes, per family (see ``plan_hierarchy``).
+GEMM_SPLITS = ("column", "row")
+
+
+class HierarchyError(ValueError):
+    """An illegal two-level composition, with a machine-checkable reason
+    (``unsupported`` | ``flow`` | ``outer-divisibility`` |
+    ``halo-exceeds-outer-shard``)."""
+
+    def __init__(self, reason: str, message: str):
+        super().__init__(f"[{reason}] {message}")
+        self.reason = reason
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchicalTarget:
+    """Two-level target: outer (dp, tp) mesh of inner chip meshes.
+
+    ``outer_shape=(dp, tp)``: data-parallel x tensor-parallel groups —
+    ``dp`` splits the independent dim (M rows / bmm batch / stencil row
+    tiles), ``tp`` applies the Megatron column/row split.  ``inner`` is
+    the per-group chip target every sub-recurrence plans against.
+    ``interconnect_gbps`` prices the outer collectives (the inter-chip
+    link, distinct from the inner target's PLIO ``edge_gbps``).
+
+    ``mesh_shape``/``mesh_axes`` forward to the inner target so the
+    shared plan plumbing (autotune clamping, key assembly) reads one
+    duck-typed surface for flat and hierarchical targets.
+    """
+
+    name: str = "hier"
+    outer_shape: tuple[int, int] = (1, 2)
+    outer_axes: tuple[str, str] = ("dp", "tp")
+    inner: Target = Target(name="planned_chip", mesh_shape=(1, 8))
+    interconnect_gbps: float = 50.0
+
+    @property
+    def mesh_shape(self) -> tuple[int, ...]:
+        return self.inner.mesh_shape
+
+    @property
+    def mesh_axes(self) -> tuple[str, ...]:
+        return self.inner.mesh_axes
+
+    @property
+    def groups(self) -> int:
+        return int(math.prod(self.outer_shape))
+
+    @property
+    def n_devices(self) -> int:
+        return self.groups * int(math.prod(self.inner.mesh_shape))
+
+
+#: The serving default: one dp group, 2-way tensor parallelism over the
+#: facade's planned_chip geometry (serve/engine.py accepts any other).
+SERVING_HIERARCHICAL_TARGET = HierarchicalTarget(name="hier_serving")
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchicalPlan:
+    """An outer split + the inner plan every group executes.
+
+    Duck-types ``ExecutionPlan`` where the shared plumbing needs it
+    (``recurrence``/``target``/``backend``/``provenance``/``feasible``),
+    exactly as ``fusion.FusedPlan`` does.  ``backend`` names the
+    lowering of BOTH levels — the outer composition mode follows from
+    it (traceable split for xla/pallas, per-group device blocks for
+    systolic/allgather) and the inner groups run the same backend.
+    """
+
+    recurrence: UniformRecurrence
+    target: HierarchicalTarget
+    outer_split: str                 # "column" | "row" | "batch" | "halo"
+    sub_recurrence: UniformRecurrence
+    inner_plan: ExecutionPlan
+    outer_bytes: int                 # modelled outer collective wire bytes
+    outer_us: float
+    inner_us: float
+    backend: str = "pallas"
+    provenance: str = "modelled"
+
+    @property
+    def feasible(self) -> bool:
+        return self.inner_plan.feasible
+
+    @property
+    def combined_us(self) -> float:
+        return self.outer_us + self.inner_us
+
+    @property
+    def predicted_tops(self) -> float:
+        if self.combined_us <= 0:
+            return 0.0
+        return 2.0 * self.recurrence.total_ops / (self.combined_us * 1e6)
+
+    def describe(self) -> str:
+        dp, tp = self.target.outer_shape
+        return (
+            f"[hier {self.recurrence.name}/{self.recurrence.dtype}] "
+            f"outer {dp}x{tp} split={self.outer_split} "
+            f"bytes={self.outer_bytes} cost={self.combined_us:.1f}us | "
+            f"inner {self.inner_plan.describe()} | "
+            f"backend={self.backend}[{self.provenance}]"
+        )
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration + the combined cost model
+# ---------------------------------------------------------------------------
+
+def _bytes_of(dtype: str) -> int:
+    return DTYPE_BYTES.get(dtype, 4)
+
+
+def _acc_bytes(dtype: str) -> int:
+    # the shared accumulator ladder (runtime.acc_dtype): int -> int32,
+    # float -> float32 — both 4 bytes
+    return 4
+
+
+def _out_bytes(dtype: str) -> int:
+    # runtime.out_dtype: int -> int32 (4B), float -> same dtype
+    return 4 if dtype.startswith("int") else _bytes_of(dtype)
+
+
+def _builder(name: str):
+    from repro.kernels import registry  # late: kernels import core
+
+    return registry.get(name).builder
+
+
+def _roofline_us(total_ops: int, tops: float) -> float:
+    """Inner roofline time for one group (2 ops per MAC point)."""
+    if tops <= 0 or math.isinf(tops):
+        return 0.0
+    return 2.0 * total_ops / (tops * 1e6)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Candidate:
+    split: str
+    sub: UniformRecurrence
+    outer_bytes: int
+
+
+def _gemm_candidates(rec: UniformRecurrence,
+                     ht: HierarchicalTarget) -> list[_Candidate]:
+    dp, tp = ht.outer_shape
+    build = _builder(rec.name)
+    out: list[_Candidate] = []
+    if rec.name == "mm":
+        m, n, k = rec.extents
+        if m % dp:
+            return out
+        if n % tp == 0:  # column parallel: all-gather the N shards
+            shard = (m // dp) * (n // tp) * _out_bytes(rec.dtype)
+            out.append(_Candidate(
+                "column", build(m // dp, n // tp, k, rec.dtype),
+                dp * ring_allgather_bytes(shard, tp)))
+        if k % tp == 0:  # row parallel: all-reduce the K partials
+            payload = (m // dp) * n * _acc_bytes(rec.dtype)
+            out.append(_Candidate(
+                "row", build(m // dp, n, k // tp, rec.dtype),
+                dp * ring_allreduce_bytes(payload, tp)))
+        return out
+    # bmm: extents (b, m, n, k), builder (b, m, n, k)
+    b, m, n, k = rec.extents
+    if b % dp:
+        return out
+    b_loc = b // dp
+    if b_loc % tp == 0:  # pure batch split: no outer collective at all
+        out.append(_Candidate(
+            "batch", build(b_loc // tp, m, n, k, rec.dtype), 0))
+    if n % tp == 0:
+        shard = b_loc * m * (n // tp) * _out_bytes(rec.dtype)
+        out.append(_Candidate(
+            "column", build(b_loc, m, n // tp, k, rec.dtype),
+            dp * ring_allgather_bytes(shard, tp)))
+    if k % tp == 0:
+        payload = b_loc * m * n * _acc_bytes(rec.dtype)
+        out.append(_Candidate(
+            "row", build(b_loc, m, n, k // tp, rec.dtype),
+            dp * ring_allreduce_bytes(payload, tp)))
+    return out
+
+
+def _stencil_radius(rec: UniformRecurrence) -> int:
+    star = stencil_star(rec)
+    if star is None:
+        raise HierarchyError(
+            "unsupported", f"{rec.name}: no star access — not a stencil")
+    return max(abs(o[0]) for o in star) if star else 0
+
+
+def _stencil_candidates(rec: UniformRecurrence,
+                        ht: HierarchicalTarget) -> list[_Candidate]:
+    """Halo-sharded outer row tiles of the padded grid.
+
+    The outer level linearizes (dp, tp) into G overlapping row tiles:
+    group g receives padded-grid rows ``[g*h_loc, g*h_loc + h_loc + 2r)``
+    — its neighbours' facing ``r`` rows ride along as the tile's own
+    Dirichlet padding, which is *exact* for a single-sweep star stencil
+    (the sweep reads only the input grid), so no inter-tile exchange is
+    needed at execution time.  The modelled wire bytes are the two
+    ``r``-wide strips per internal tile boundary a real deployment
+    streams (the outer analogue of ``kernels/systolic.halo_stencil``).
+    """
+    g = ht.groups
+    h, w = rec.extents[0], rec.extents[1]
+    r = _stencil_radius(rec)
+    if h % g:
+        raise HierarchyError(
+            "outer-divisibility",
+            f"{rec.name}: interior rows {h} do not divide over "
+            f"{g} outer tiles (dp x tp = {ht.outer_shape})")
+    h_loc = h // g
+    from repro.kernels.systolic import halo_fits  # shared chip/outer predicate
+
+    if not halo_fits(r, h, g):
+        raise HierarchyError(
+            "halo-exceeds-outer-shard",
+            f"{rec.name}: stencil radius {r} exceeds the {h_loc}-row "
+            f"outer tile — an outer halo can only come from the adjacent "
+            "tile; use fewer outer groups or a taller grid")
+    strip = r * (w + 2 * r) * _bytes_of(rec.dtype)
+    sub = _builder(rec.name)(h_loc, w, rec.dtype)
+    return [_Candidate("halo", sub, halo_exchange_bytes(strip, g - 1))]
+
+
+def plan_hierarchy(rec: UniformRecurrence, ht: HierarchicalTarget,
+                   policy=None) -> HierarchicalPlan:
+    """Enumerate legal outer splits, plan each sub-recurrence on the
+    inner target, rank by the combined cost, return the winner.
+
+    Candidates rank by ``(outer collective time + inner roofline time,
+    inner PLIO peak congestion)``; the inner plans come from the
+    unchanged ``mapper.best_plan`` path (with ``policy`` forwarded for
+    the winner, so the inner schedule also gets its measured backend
+    when the crossover table covers the sub-shape).
+    """
+    if getattr(rec, "stages", None) is not None:
+        raise HierarchyError(
+            "unsupported",
+            f"fused chain {rec.name}: chains do not compose "
+            "hierarchically — plan the stages separately")
+    dp, tp = ht.outer_shape
+    if dp < 1 or tp < 1:
+        raise HierarchyError(
+            "outer-divisibility", f"outer shape {ht.outer_shape} must be "
+            "positive")
+    if rec.name == "jacobi2d_ms":
+        raise HierarchyError(
+            "flow",
+            "jacobi2d_ms: the sweep loop carries a flow dependence — "
+            "outer tiles would need a halo exchange per sweep, which the "
+            "host-level composition cannot express")
+    if rec.name not in SPLITTABLE:
+        raise HierarchyError(
+            "unsupported",
+            f"{rec.name}: no outer split defined (supported: "
+            f"{', '.join(SPLITTABLE)})")
+    if rec.name in ("mm", "bmm"):
+        cands = _gemm_candidates(rec, ht)
+        if not cands:
+            raise HierarchyError(
+                "outer-divisibility",
+                f"{rec.name} extents {rec.extents} admit no outer "
+                f"{dp}x{tp} split (dp must divide the leading dim; tp "
+                "must divide N, K, or the per-dp batch)")
+    else:
+        cands = _stencil_candidates(rec, ht)
+
+    best: tuple | None = None
+    for cand in cands:
+        inner = best_plan(cand.sub, ht.inner)
+        outer_us = collective_time_s(
+            cand.outer_bytes, ht.interconnect_gbps) * 1e6
+        inner_us = _roofline_us(cand.sub.total_ops, inner.predicted_tops)
+        cong = congestion_scalar(inner.congestion_west,
+                                 inner.congestion_east)
+        rank = (outer_us + inner_us, cong)
+        if best is None or rank < best[0]:
+            best = (rank, cand, inner, outer_us, inner_us)
+    _, cand, inner, outer_us, inner_us = best
+    if policy is not None and policy.mode != "modelled":
+        # the winner's inner plan re-resolves under the caller's policy
+        # (flat sub-shape key at the inner mesh)
+        inner = best_plan(cand.sub, ht.inner, policy=policy)
+    return HierarchicalPlan(
+        recurrence=rec,
+        target=ht,
+        outer_split=cand.split,
+        sub_recurrence=cand.sub,
+        inner_plan=inner,
+        outer_bytes=cand.outer_bytes,
+        outer_us=outer_us,
+        inner_us=inner_us,
+        backend=inner.backend,
+    )
+
+
+# ---------------------------------------------------------------------------
+# outer collective byte models (re-exported from parallel/collectives.py)
+# ---------------------------------------------------------------------------
+
+# Late-bound at module import: parallel.collectives imports jax but no
+# core modules, so this direction is cycle-free.
+from repro.parallel.collectives import (  # noqa: E402
+    halo_exchange_bytes,
+    ring_allgather_bytes,
+    ring_allreduce_bytes,
+)
+
+
+# ---------------------------------------------------------------------------
+# execution: host/traceable composition (NOT a nested shard_map)
+# ---------------------------------------------------------------------------
+
+def hierarchical_available_backends(ht: HierarchicalTarget) -> tuple[str, ...]:
+    """Backends this process can execute for a hierarchical target: the
+    traceable compositions always; the per-group chip schedules only
+    when the host exposes ``dp*tp`` disjoint inner meshes."""
+    import jax
+
+    avail = ["pallas", "xla"]
+    try:
+        n_dev = jax.local_device_count()
+    except RuntimeError:  # pragma: no cover - no backend at all
+        n_dev = 1
+    if n_dev >= ht.n_devices and len(ht.inner.mesh_shape) >= 2:
+        avail += ["systolic", "allgather"]
+    return tuple(avail)
+
+
+def _group_fns(plan: HierarchicalPlan, backend: str,
+               interpret: bool | None) -> list[Callable]:
+    """One inner callable per outer group.  xla/pallas share a single
+    traceable function; systolic/allgather get disjoint per-group device
+    blocks, each an (R, C) inner mesh the unchanged spec hooks run on."""
+    from .codegen import lower_plan
+
+    g = plan.target.groups
+    if backend in ("systolic", "allgather"):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.compat import make_mesh
+
+        inner_t = plan.inner_plan.target
+        rr, cc = inner_t.mesh_shape[:2]
+        need = g * rr * cc
+        devs = jax.devices()
+        if len(devs) < need:
+            raise RuntimeError(
+                f"hierarchical {backend}: {need} devices needed for "
+                f"{g} groups of {rr}x{cc} chips, host has {len(devs)}")
+        blocks = np.asarray(devs[:need]).reshape(g, rr * cc)
+
+        def on_block(i):
+            fn = lower_plan(plan.inner_plan, backend=backend,
+                            mesh=make_mesh((rr, cc), inner_t.mesh_axes[:2],
+                                           devices=list(blocks[i])))
+
+            def pulled(*operands):
+                # each group's result lives on its own device block;
+                # pull it to host so the outer concat/sum can combine
+                # across blocks (this mode is host-side by construction)
+                return jnp.asarray(np.asarray(fn(*operands)))
+
+            return pulled
+
+        return [on_block(i) for i in range(g)]
+    fn = lower_plan(plan.inner_plan, backend=backend, interpret=interpret)
+    return [fn] * g
+
+
+def lower_hierarchical(plan: HierarchicalPlan, backend: str | None = None,
+                       mesh=None, interpret: bool | None = None,
+                       out_dtype=None) -> Callable:
+    """HierarchicalPlan -> executable callable with the flat operand
+    contract of the underlying spec (full-size operands in, full-size
+    output out — callers cannot tell the two plan kinds apart).
+
+    ``mesh`` is accepted for signature parity with ``lower_plan`` and
+    ignored: the chip backends build their own per-group meshes from
+    the process's device list.
+    """
+    import jax.numpy as jnp
+
+    backend = backend or plan.backend
+    fns = _group_fns(plan, backend, interpret)
+    dp, tp = plan.target.outer_shape
+    name = plan.recurrence.name
+
+    def _cast(y):
+        return y if out_dtype is None else y.astype(out_dtype)
+
+    if name == "mm":
+        m, n, k = plan.recurrence.extents
+        m_loc = m // dp
+        if plan.outer_split == "column":
+            n_loc = n // tp
+
+            def run(x, w):
+                rows = []
+                for d in range(dp):
+                    x_d = x[d * m_loc:(d + 1) * m_loc]
+                    cols = [fns[d * tp + t](
+                        x_d, w[:, t * n_loc:(t + 1) * n_loc])
+                        for t in range(tp)]
+                    rows.append(jnp.concatenate(cols, axis=1)
+                                if tp > 1 else cols[0])
+                return _cast(jnp.concatenate(rows, axis=0)
+                             if dp > 1 else rows[0])
+        else:  # row parallel
+            k_loc = k // tp
+
+            def run(x, w):
+                rows = []
+                for d in range(dp):
+                    x_d = x[d * m_loc:(d + 1) * m_loc]
+                    acc = None
+                    for t in range(tp):
+                        part = fns[d * tp + t](
+                            x_d[:, t * k_loc:(t + 1) * k_loc],
+                            w[t * k_loc:(t + 1) * k_loc])
+                        acc = part if acc is None else acc + part
+                    rows.append(acc)
+                return _cast(jnp.concatenate(rows, axis=0)
+                             if dp > 1 else rows[0])
+        return run
+
+    if name == "bmm":
+        b, m, n, k = plan.recurrence.extents
+        b_loc = b // dp
+        if plan.outer_split == "batch":
+            b_sub = b_loc // tp
+
+            def run(a, bb):
+                outs = [fns[i](a[i * b_sub:(i + 1) * b_sub],
+                               bb[i * b_sub:(i + 1) * b_sub])
+                        for i in range(dp * tp)]
+                return _cast(jnp.concatenate(outs, axis=0)
+                             if dp * tp > 1 else outs[0])
+        elif plan.outer_split == "column":
+            n_loc = n // tp
+
+            def run(a, bb):
+                rows = []
+                for d in range(dp):
+                    a_d = a[d * b_loc:(d + 1) * b_loc]
+                    b_d = bb[d * b_loc:(d + 1) * b_loc]
+                    cols = [fns[d * tp + t](
+                        a_d, b_d[:, :, t * n_loc:(t + 1) * n_loc])
+                        for t in range(tp)]
+                    rows.append(jnp.concatenate(cols, axis=2)
+                                if tp > 1 else cols[0])
+                return _cast(jnp.concatenate(rows, axis=0)
+                             if dp > 1 else rows[0])
+        else:  # row parallel
+            k_loc = k // tp
+
+            def run(a, bb):
+                rows = []
+                for d in range(dp):
+                    a_d = a[d * b_loc:(d + 1) * b_loc]
+                    b_d = bb[d * b_loc:(d + 1) * b_loc]
+                    acc = None
+                    for t in range(tp):
+                        part = fns[d * tp + t](
+                            a_d[:, :, t * k_loc:(t + 1) * k_loc],
+                            b_d[:, t * k_loc:(t + 1) * k_loc])
+                        acc = part if acc is None else acc + part
+                    rows.append(acc)
+                return _cast(jnp.concatenate(rows, axis=0)
+                             if dp > 1 else rows[0])
+        return run
+
+    # stencils: overlapping outer row tiles of the padded grid
+    g = plan.target.groups
+    h = plan.recurrence.extents[0]
+    h_loc = h // g
+    r = _stencil_radius(plan.recurrence)
+
+    def run(grid, weights):
+        outs = [fns[i](grid[i * h_loc:i * h_loc + h_loc + 2 * r, :],
+                       weights)
+                for i in range(g)]
+        return _cast(jnp.concatenate(outs, axis=0) if g > 1 else outs[0])
+
+    return run

@@ -309,9 +309,25 @@ def best_plan(rec: UniformRecurrence, target: Target = Target(),
     fusion legality pass (``fusion.fuse``, raising ``FusionError`` on an
     illegal chain) and returns a ``FusedPlan`` — policy handling is
     identical, with chain-extended table keys (``name1+name2|...``).
+
+    ``target`` may be a ``hierarchy.HierarchicalTarget``: the call then
+    returns a ``HierarchicalPlan`` — an outer Megatron-style split whose
+    per-group sub-recurrence re-enters this same entrypoint against the
+    inner chip target (raising ``HierarchyError`` when no outer split is
+    legal).  Policy handling moves one level down: the winner's inner
+    plan gets the measured backend, and ``autotune.apply_policy`` clamps
+    the hierarchical key's winner the same way it clamps flat plans.
     """
     from . import fusion  # late: fusion imports this module
+    from . import hierarchy  # late: hierarchy imports this module
 
+    if isinstance(target, hierarchy.HierarchicalTarget):
+        plan = hierarchy.plan_hierarchy(rec, target, policy=policy)
+        if policy is None or policy.mode == "modelled":
+            return plan
+        from . import autotune
+
+        return autotune.apply_policy(plan, policy)
     if isinstance(rec, fusion.RecurrenceChain):
         plan = fusion.fuse(rec, target)
         if policy is None or policy.mode == "modelled":

@@ -221,6 +221,16 @@ def congestion(
     return west, east
 
 
+def congestion_scalar(
+    west: tuple[int, ...] | list[int], east: tuple[int, ...] | list[int]
+) -> int:
+    """Collapse per-boundary (west, east) congestion into one comparable
+    scalar — the peak per-direction column load.  Used as a ranking
+    tie-break (e.g. between hierarchical outer splits whose modelled
+    times coincide): lower peak congestion wins."""
+    return max(max(west, default=0), max(east, default=0))
+
+
 def is_feasible(
     graph: MappedGraph,
     assignment: dict[str, int],

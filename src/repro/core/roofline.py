@@ -173,6 +173,15 @@ def analyze(
     )
 
 
+def collective_time_s(nbytes: float, link_gbps: float = ICI_BW / 1e9) -> float:
+    """Wire time for ``nbytes`` over a ``link_gbps`` GB/s interconnect —
+    the outer-level term of the hierarchical combined cost model (the
+    inner level keeps its PLIO model; this prices the inter-chip link)."""
+    if nbytes <= 0:
+        return 0.0
+    return float(nbytes) / (link_gbps * 1e9)
+
+
 def format_table(rows: list[Roofline]) -> str:
     if not rows:
         return "(empty)"

@@ -85,40 +85,56 @@ DEFAULT_POLICY = PlanPolicy(mode="cached")
 
 @dataclasses.dataclass(frozen=True)
 class PlannedConfig:
-    """The facade's whole configuration surface."""
+    """The facade's whole configuration surface.
+
+    ``target`` is the execution target facade GEMMs plan against: None
+    means the single-chip ``PLANNED_TARGET``; a ``core.hierarchy.
+    HierarchicalTarget`` makes every facade mm/bmm plan two-level
+    (outer Megatron split x inner chip), which is how the serve engines
+    turn on tensor parallelism without touching a call site.
+    """
 
     enabled: bool = True
     policy: PlanPolicy = DEFAULT_POLICY
+    target: Target | None = None
 
 
 #: None = configure() never called -> defaults + the deprecated env alias.
 _CONFIG: PlannedConfig | None = None
 _ENV_WARNED = False
 
+#: configure()/override() sentinel: "leave this field alone" — distinct
+#: from None, which for ``target`` means "back to PLANNED_TARGET".
+_UNSET = object()
+
 
 def configure(enabled: bool | None = None,
-              policy: PlanPolicy | None = None) -> PlannedConfig:
+              policy: PlanPolicy | None = None,
+              target=_UNSET) -> PlannedConfig:
     """Set the facade configuration; unspecified fields keep their
-    current effective value.  Returns the new config.  Once called, the
+    current effective value (``target=None`` explicitly resets to the
+    single-chip default).  Returns the new config.  Once called, the
     deprecated ``REPRO_PLANNED`` env alias is ignored."""
     global _CONFIG
     base = current_config()
     _CONFIG = PlannedConfig(
         enabled=base.enabled if enabled is None else bool(enabled),
         policy=base.policy if policy is None else policy,
+        target=base.target if target is _UNSET else target,
     )
     return _CONFIG
 
 
 @contextlib.contextmanager
 def override(enabled: bool | None = None,
-             policy: PlanPolicy | None = None):
+             policy: PlanPolicy | None = None,
+             target=_UNSET):
     """Scoped ``configure``: applies inside the ``with`` block, restores
     the previous configuration (including "never configured") on exit."""
     global _CONFIG
     prev = _CONFIG
     try:
-        yield configure(enabled=enabled, policy=policy)
+        yield configure(enabled=enabled, policy=policy, target=target)
     finally:
         _CONFIG = prev
 
@@ -187,7 +203,7 @@ def plan_request(kind: str, shape, dtype: str,
         kind=kind,
         shape=tuple(_norm_dim(d) for d in shape),
         dtype=str(dtype),
-        target=target or PLANNED_TARGET,
+        target=target or current_config().target or PLANNED_TARGET,
         policy=policy or current_policy(),
     )
 
@@ -328,6 +344,16 @@ def _execute(plan: ExecutionPlan, *operands, out_dtype=None):
     from . import registry  # late: avoids import cycles
     from .runtime import execute_plan
 
+    if hasattr(plan, "outer_split"):  # HierarchicalPlan
+        from repro.core import hierarchy
+
+        # facade calls trace under jit (serving AOT-compiles the step),
+        # so only the traceable outer compositions run here — a measured
+        # chip-backend winner clamps to xla, same as _execute_pair
+        backend = plan.backend if plan.backend in ("xla", "pallas") else "xla"
+        fn = hierarchy.lower_hierarchical(
+            plan, backend=backend, out_dtype=out_dtype)
+        return fn(*operands)
     if plan.backend == "xla":
         # the crossover table measured the reference lowering as the
         # winner for this shape — run it, matching the pallas kernels'

@@ -296,6 +296,15 @@ def _star_of(plan: "ExecutionPlan") -> tuple[tuple[tuple[int, int], ...], int]:
     return tuple((o[0], o[1] if len(o) > 1 else 0) for o in star), radius
 
 
+def halo_fits(radius: int, interior: int, shards: int) -> bool:
+    """Whether a one-hop halo exchange can serve ``shards`` tiles of an
+    ``interior``-point axis at stencil ``radius``: each tile must be at
+    least ``radius`` wide, or a halo would span a non-adjacent tile.
+    Shared legality predicate between the chip-level ``halo_stencil``
+    shards and the hierarchical outer row tiles (core/hierarchy.py)."""
+    return shards > 0 and interior % shards == 0 and radius <= interior // shards
+
+
 def halo_stencil(plan: "ExecutionPlan", mesh) -> Callable:
     """Width-k halo-exchange schedule over the plan's two space axes.
 

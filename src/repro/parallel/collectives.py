@@ -24,6 +24,37 @@ from repro.compat import shard_map as _shard_map
 
 
 # ---------------------------------------------------------------------------
+# collective wire-byte models (used by the hierarchical outer cost model)
+# ---------------------------------------------------------------------------
+
+def ring_allgather_bytes(shard_bytes: int, group: int) -> int:
+    """Total wire bytes for a ring all-gather of ``group`` shards of
+    ``shard_bytes`` each: every shard transits ``group - 1`` hops."""
+    if group <= 1:
+        return 0
+    return int(group) * (int(group) - 1) * int(shard_bytes)
+
+
+def ring_allreduce_bytes(payload_bytes: int, group: int) -> int:
+    """Total wire bytes for a ring all-reduce of one ``payload_bytes``
+    buffer over ``group`` ranks: reduce-scatter + all-gather, each moving
+    ``(group - 1) / group`` of the payload per rank — ``2 * (group - 1) *
+    payload`` in total (the standard 2(p-1)/p identity summed over p)."""
+    if group <= 1:
+        return 0
+    return 2 * (int(group) - 1) * int(payload_bytes)
+
+
+def halo_exchange_bytes(strip_bytes: int, boundaries: int) -> int:
+    """Total wire bytes for a halo exchange across ``boundaries`` internal
+    tile boundaries: each boundary carries one ``strip_bytes`` strip in
+    each direction."""
+    if boundaries <= 0:
+        return 0
+    return 2 * int(strip_bytes) * int(boundaries)
+
+
+# ---------------------------------------------------------------------------
 # int8 quantized all-reduce (stochastic rounding)
 # ---------------------------------------------------------------------------
 
@@ -64,7 +95,13 @@ def ring_reduce_scatter_matmul(x_loc: jax.Array, w_loc: jax.Array,
     idx = jax.lax.axis_index(axis)
     n_sh = axis_size
     perm = [(i, (i + 1) % n_sh) for i in range(n_sh)]
-    p_loc = jnp.dot(x_loc, w_loc, preferred_element_type=jnp.float32)
+    # Accumulate in the plan's acc dtype (int -> int32, float -> fp32),
+    # not the input dtype: int8 partials overflow past 2^24 in fp32 MACs
+    # and bf16 ring hops flush every chunk-add to 8 mantissa bits.  The
+    # ring sums below then stay in acc precision end to end.
+    acc_t = (jnp.int32 if jnp.issubdtype(x_loc.dtype, jnp.integer)
+             else jnp.float32)
+    p_loc = jnp.dot(x_loc, w_loc, preferred_element_type=acc_t)
     m = p_loc.shape[0]
     assert m % n_sh == 0, (m, n_sh)
     m_loc = m // n_sh

@@ -63,6 +63,31 @@ def default_rules(multi_pod: bool = False, fsdp: bool = True) -> dict:
     }
 
 
+def hierarchical_rules(outer_axes: tuple[str, str] = ("dp", "tp"),
+                       fsdp: bool = False) -> dict:
+    """Logical -> mesh-axis rules for the *outer* level of a two-level
+    plan (``core.hierarchy.HierarchicalTarget``): the independent dims
+    ride the data-parallel axis, the Megatron-split dims the tensor-
+    parallel axis.  The inner chip axes stay out of these rules — the
+    inner schedule is a separate shard_map region, never nested inside
+    the outer one (see core/hierarchy.py)."""
+    dp, tp = outer_axes
+    return {
+        "batch": dp,
+        "seq": None,
+        "seq_sp": tp,
+        "heads": tp,
+        "kv_heads": tp,
+        "ff": tp,
+        "experts": tp,
+        "vocab": tp,
+        "d_model": dp if fsdp else None,
+        "layers": None,
+        "ssm_heads": tp,
+        "state": None,
+    }
+
+
 def use_mesh_ctx(ctx: MeshCtx | None):
     _STATE.ctx = ctx
 

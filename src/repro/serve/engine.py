@@ -89,9 +89,14 @@ def _validate_request(prompt, max_new_tokens: int, max_seq: int,
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, *, max_slots: int = 4,
                  max_seq: int = 512, prompt_len: int | None = None,
-                 policy: autotune.PlanPolicy | None = None):
+                 policy: autotune.PlanPolicy | None = None,
+                 target=None):
         self.cfg = cfg
         self.policy = policy
+        # optional execution target for the serving GEMMs — pass a
+        # core.HierarchicalTarget to split them column/row-parallel over
+        # the outer tp axis (None inherits the ambient planned config)
+        self.target = target
         self.api = build_model(cfg)
         self.max_slots = max_slots
         self.max_seq = max_seq
@@ -126,15 +131,17 @@ class ServeEngine:
         planning only *reads* the committed table, it never races
         backends.
 
-        If the engine was constructed with a ``PlanPolicy``, the warmup
-        trace runs under it (``planned.override``); otherwise whatever
-        ``planned.configure`` set up (default: ``mode="cached"``) applies.
+        If the engine was constructed with a ``PlanPolicy`` and/or a
+        ``target`` (e.g. ``core.HierarchicalTarget`` for outer tensor
+        parallelism), the warmup trace runs under them
+        (``planned.override``); otherwise whatever ``planned.configure``
+        set up (default: ``mode="cached"``, single-chip target) applies.
         """
         self.params = params
         self.cache = self.api.init_cache(self.max_slots, self.max_seq)
         before = planned.planned_report()
         tune0 = autotune.counters()
-        with planned.override(policy=self.policy):
+        with self._plan_ctx():
             tokens0 = jnp.zeros((self.max_slots, 1), jnp.int32)
             self._decode_exec = self._decode_jit.lower(
                 params, self.cache, tokens0).compile()
@@ -146,6 +153,15 @@ class ServeEngine:
             before, planned.planned_report())
         tune1 = autotune.counters()
         self.autotune_report = {k: tune1[k] - tune0[k] for k in tune1}
+
+    def _plan_ctx(self):
+        """The planning override every trace runs under: the engine's
+        policy, plus its execution target when one was given (kept
+        ambient otherwise — an explicit None would clobber a process-
+        level ``planned.configure(target=...)``)."""
+        if self.target is not None:
+            return planned.override(policy=self.policy, target=self.target)
+        return planned.override(policy=self.policy)
 
     def _prefill_spec(self):
         """Abstract prefill batch for plan warmup — family-aware and
@@ -232,7 +248,10 @@ class ServeEngine:
     def step(self) -> int:
         """Admit + one decode step for all active lanes.  Returns number of
         active requests after the step."""
-        self._admit()
+        with self._plan_ctx():
+            # admission prefills trace planned GEMMs at call time, so the
+            # engine's policy/target must be ambient here, not just in load
+            self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return len(self.queue)
@@ -276,9 +295,13 @@ class PagedServeEngine:
                  num_blocks: int | None = None,
                  prompt_len: int | None = None,
                  policy: autotune.PlanPolicy | None = None,
-                 scheduler: Scheduler | SchedulerConfig | None = None):
+                 scheduler: Scheduler | SchedulerConfig | None = None,
+                 target=None):
         self.cfg = cfg
         self.policy = policy
+        # as in ServeEngine: an optional (possibly hierarchical)
+        # execution target for every serving GEMM this engine traces
+        self.target = target
         self.api = build_model(cfg)
         if self.api.paged_decode is None:
             raise ValueError(
@@ -337,7 +360,7 @@ class PagedServeEngine:
         self.num_blocks = self.kv.num_blocks
         before = planned.planned_report()
         tune0 = autotune.counters()
-        with planned.override(policy=self.policy):
+        with self._plan_ctx():
             decode_jit = jax.jit(
                 lambda p, pools, t, bt, pos, act:
                 self.api.paged_decode(p, pools, t, bt, pos, act))
@@ -370,6 +393,13 @@ class PagedServeEngine:
             before, planned.planned_report())
         tune1 = autotune.counters()
         self.autotune_report = {k: tune1[k] - tune0[k] for k in tune1}
+
+    def _plan_ctx(self):
+        """Same contract as ``ServeEngine._plan_ctx``: policy + optional
+        execution target, leaving the ambient target alone when unset."""
+        if self.target is not None:
+            return planned.override(policy=self.policy, target=self.target)
+        return planned.override(policy=self.policy)
 
     # -- submit -------------------------------------------------------------
     def _extra_rows(self, extra: dict | None) -> int:
@@ -504,7 +534,10 @@ class PagedServeEngine:
     def step(self) -> int:
         """Admit + one decode step for all active lanes.  Returns active
         request count after the step plus the queue backlog."""
-        self._admit()
+        with self._plan_ctx():
+            # bucketed prefills compile lazily on first admit — the
+            # engine's policy/target must be ambient for those traces
+            self._admit()
         self._ensure_capacity()
         active = [i for i, r in enumerate(self.lanes) if r is not None]
         if not active:

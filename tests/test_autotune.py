@@ -67,6 +67,31 @@ def test_key_is_deterministic_across_processes():
     assert proc.stdout.strip().splitlines()[-1] == local
 
 
+def test_hierarchical_key_is_deterministic_across_processes():
+    """The outer-mesh key component is pure string assembly too: a
+    hierarchical key computed in a fresh process is byte-identical."""
+    code = (
+        "import sys; sys.path.insert(0, 'src')\n"
+        "from repro.core import autotune\n"
+        "from repro.kernels import registry\n"
+        "spec = registry.get('mm')\n"
+        "rec = spec.builder(*spec.smoke_args, 'int16')\n"
+        "print(autotune.autotune_key(rec, (2, 2), outer_shape=(2, 4)))\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        cwd=ROOT, env={**os.environ, "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr[-500:]
+    local = autotune.autotune_key(_smoke_rec("mm", "int16"), (2, 2),
+                                  outer_shape=(2, 4))
+    assert proc.stdout.strip().splitlines()[-1] == local
+    name, dtype, extents, outer, mesh = local.split("|")
+    assert (outer, mesh) == ("outer2x4", "mesh2x2")
+    # flat keys are unchanged by the outer field (4-field schema)
+    assert autotune.autotune_key(
+        _smoke_rec("mm", "int16"), (2, 2)).count("|") == 3
+
+
 def test_request_key_maps_builder_args_to_ir_extents():
     spec = registry.get("jacobi2d")
     req = autotune.PlanRequest(
@@ -116,6 +141,45 @@ def test_bad_table_falls_back_to_modelled_plan(tmp_path):
                      policy=PlanPolicy(mode="cached", table_path=str(path)))
     assert plan.provenance == "modelled" and plan.backend == "pallas"
     assert autotune.counters()["table_errors"] == errors_before + 1
+
+
+def test_corrupt_table_falls_back_to_modelled_hierarchical_plan(tmp_path):
+    """A rejected table degrades two-level planning exactly like flat
+    planning: the modelled ``HierarchicalPlan`` comes back, nothing
+    raises, and the rejection is counted."""
+    from repro.core import SERVING_HIERARCHICAL_TARGET
+
+    path = tmp_path / "corrupt.json"
+    path.write_text("{not json", encoding="utf-8")
+    errors_before = autotune.counters()["table_errors"]
+    plan = best_plan(_smoke_rec("mm"), SERVING_HIERARCHICAL_TARGET,
+                     policy=PlanPolicy(mode="cached", table_path=str(path)))
+    assert hasattr(plan, "outer_split")
+    assert plan.provenance == "modelled"
+    # two-level resolution consults the table for the outer key AND the
+    # winner's inner sub-plan, so a corrupt table is rejected >= once
+    assert autotune.counters()["table_errors"] > errors_before
+
+
+def test_stale_hierarchical_entry_falls_back_to_modelled(tmp_path):
+    """An entry-level corruption (stale backend name under a
+    hierarchical key) rejects the whole table at load: cached planning
+    for that key degrades to the modelled hierarchical choice."""
+    from repro.core import SERVING_HIERARCHICAL_TARGET as HT
+
+    rec = _smoke_rec("mm")
+    key = autotune.autotune_key(rec, HT.mesh_shape,
+                                outer_shape=HT.outer_shape)
+    path = tmp_path / "stale.json"
+    path.write_text(json.dumps({
+        "schema": autotune.TABLE_SCHEMA,
+        "entries": {key: _entry(backend="aie_v1")},
+    }), encoding="utf-8")
+    with pytest.raises(autotune.TableError):
+        autotune.load_table(path)
+    plan = best_plan(rec, HT,
+                     policy=PlanPolicy(mode="cached", table_path=str(path)))
+    assert hasattr(plan, "outer_split") and plan.provenance == "modelled"
 
 
 def test_rewritten_table_is_picked_up_by_mtime(tmp_path):
@@ -210,6 +274,35 @@ def test_committed_table_serves_fused_mlp_pair_chains():
     assert autotune.counters()["measure_calls"] == before
 
 
+def test_committed_table_serves_hierarchical_serving_gemms():
+    """The committed table carries the serving GEMM census under the
+    serving hierarchical target's five-field keys (gen_autotune
+    --hierarchy --merge), and ``best_plan`` serves every one of them as
+    a measured two-level plan without timing anything."""
+    from repro.core import SERVING_HIERARCHICAL_TARGET as HT
+
+    table = autotune.load_table(autotune.DEFAULT_TABLE_PATH)
+    hier_keys = [k for k in table["entries"] if "|outer" in k]
+    assert hier_keys, (
+        "no hierarchical keys in the committed table — regenerate with "
+        "tools/gen_autotune.py --merge")
+    before = autotune.counters()["measure_calls"]
+    for key in hier_keys:
+        name, dtype, extents, outer, mesh = key.split("|")
+        assert outer == "outer" + "x".join(
+            str(o) for o in HT.outer_shape), key
+        assert mesh == "mesh" + "x".join(
+            str(m) for m in HT.mesh_shape), key
+        # mm/bmm builder args coincide with IR extents: rebuild from key
+        args = tuple(int(x) for x in extents.split("x"))
+        rec = registry.get(name).builder(*args, dtype)
+        plan = best_plan(rec, HT, policy=PlanPolicy(mode="cached"))
+        assert hasattr(plan, "outer_split"), key
+        assert plan.provenance == "measured", key
+        assert plan.backend in autotune.available_backends(HT), key
+    assert autotune.counters()["measure_calls"] == before
+
+
 def test_committed_table_entries_record_their_proxy():
     table = autotune.load_table(autotune.DEFAULT_TABLE_PATH)
     for key, entry in table["entries"].items():
@@ -246,6 +339,33 @@ def test_measured_roundtrip_persists_and_serves(tmp_path):
     again = best_plan(rec, SINGLE,
                       policy=PlanPolicy(mode="cached", table_path=str(path)))
     assert again.backend == first.backend
+    assert autotune.counters()["measure_calls"] == calls
+
+
+def test_hierarchical_measured_roundtrip_persists_and_serves(tmp_path):
+    """Measured mode under a hierarchical target races the winning outer
+    split's composition, persists it under the five-field key, and the
+    reloaded table serves it back under ``cached`` with zero additional
+    measurement — the same roundtrip contract as flat plans."""
+    from repro.core import HierarchicalTarget
+
+    path = tmp_path / "t.json"
+    ht = HierarchicalTarget()
+    rec = registry.get("mm").builder(64, 64, 64, "float32")
+    measured = PlanPolicy(mode="measured", table_path=str(path),
+                          reps=1, warmup=1)
+    first = best_plan(rec, ht, policy=measured)
+    assert hasattr(first, "outer_split")
+    assert first.provenance == "measured"
+    key = autotune.autotune_key(rec, ht.mesh_shape,
+                                outer_shape=ht.outer_shape)
+    table = autotune.load_table(path)
+    assert table["entries"][key]["backend"] == first.backend
+    calls = autotune.counters()["measure_calls"]
+    again = best_plan(rec, ht,
+                      policy=PlanPolicy(mode="cached", table_path=str(path)))
+    assert again.backend == first.backend
+    assert again.provenance == "measured"
     assert autotune.counters()["measure_calls"] == calls
 
 

@@ -26,6 +26,18 @@ fn = shard_map(lambda xl, wl: ring_reduce_scatter_matmul(xl, wl, "tp", 8),
 y = np.asarray(jax.jit(fn)(jnp.asarray(x), jnp.asarray(w)))
 print("RING_OK" if np.allclose(y, x @ w, atol=1e-3) else "RING_FAIL")
 
+# --- int8 TP matmul must accumulate exactly in int32 ---
+# Regression: the pre-fix fp32 MACs drop low bits once per-shard partial
+# sums pass 2^24 (values near 127 with k_loc=1280 drift by ~48 units);
+# integer inputs now accumulate in int32 and match the oracle bit-exactly.
+k8 = 10240
+x8 = rng.integers(120, 128, size=(64, k8), dtype=np.int8)
+w8 = rng.integers(120, 128, size=(k8, 32), dtype=np.int8)
+y8 = np.asarray(jax.jit(fn)(jnp.asarray(x8), jnp.asarray(w8)))
+ref8 = x8.astype(np.int64) @ w8.astype(np.int64)
+print("RING_INT8_OK" if (y8.dtype == np.int32 and np.array_equal(y8, ref8))
+      else ("RING_INT8_FAIL", y8.dtype, np.abs(y8.astype(np.int64) - ref8).max()))
+
 # --- quantized psum: unbiased within quantization noise ---
 g = rng.standard_normal((8, 256)).astype(np.float32) * 3
 fn2 = shard_map(lambda gl: quantized_psum(gl, "dp", jax.random.PRNGKey(1)),
@@ -75,6 +87,7 @@ def test_distributed_collectives():
     assert proc.returncode == 0, proc.stderr[-2000:]
     out = proc.stdout
     assert "RING_OK" in out, out
+    assert "RING_INT8_OK" in out, out
     assert "QPSUM_OK" in out, out
     assert "MOE_TP_OK" in out, out
     assert "MOE_EP_OK" in out, out

@@ -15,7 +15,11 @@ Four assertions, each cheap enough for every push:
    the exact requests ``benchmarks/run.py --ci`` plans — must hit the
    committed table (``best_plan`` returns a measured winner without
    timing anything), proving the ``--ci`` timings consult it.
-4. **Rejection path**: a corrupt table must fall back to the modelled
+4. **Hierarchical coverage**: the ``--ci`` hierarchy cases must hit the
+   committed table under the serving hierarchical target's five-field
+   keys (``best_plan`` returns a measured ``HierarchicalPlan`` without
+   timing anything), proving the two-level gate rows consult it.
+5. **Rejection path**: a corrupt table must fall back to the modelled
    choice cleanly (no exception, miss counted).
 
     PYTHONPATH=src python tools/autotune_smoke.py
@@ -27,6 +31,7 @@ import sys
 import tempfile
 from pathlib import Path
 
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 
@@ -106,7 +111,26 @@ def main() -> int:
     print(f"autotune-smoke: committed table covers all "
           f"{len(registry.specs())} specs' --ci requests, 0 measurements")
 
-    # 4. corrupt table -> clean modelled fallback
+    # 4. the committed table serves the --ci hierarchical rows too
+    from benchmarks.run import CI_HIERARCHY_CASES
+    from repro.core import SERVING_HIERARCHICAL_TARGET
+
+    before = autotune.counters()["measure_calls"]
+    for kind, bargs, dtype in CI_HIERARCHY_CASES:
+        rec = registry.get(kind).builder(*bargs, dtype)
+        plan = best_plan(rec, SERVING_HIERARCHICAL_TARGET,
+                         policy=ci_policy)
+        assert hasattr(plan, "outer_split"), (kind, plan)
+        assert plan.provenance == "measured", (
+            f"{kind}{bargs}: hierarchical key missing from the committed "
+            "default table — regenerate with tools/gen_autotune.py "
+            "--merge")
+    assert autotune.counters()["measure_calls"] == before
+    print(f"autotune-smoke: committed table covers all "
+          f"{len(CI_HIERARCHY_CASES)} hierarchical --ci cases, "
+          "0 measurements")
+
+    # 5. corrupt table -> clean modelled fallback
     with tempfile.TemporaryDirectory() as td:
         bad = Path(td) / "corrupt.json"
         bad.write_text("{not json", encoding="utf-8")

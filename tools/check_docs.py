@@ -23,7 +23,13 @@ Three checks, so the docs cannot silently rot as the code grows:
    appear in docs/fusion.md (the chain IR / legality / spec-author
    guide) — a newly fused-capable spec has to document which chains it
    joins.
-6. **Serving coverage**: docs/serving.md must exist and document the
+6. **Hierarchy coverage**: docs/hierarchy.md must exist and document
+   the two-level planning surface (``HierarchicalTarget``,
+   ``HierarchicalPlan``, every typed ``HierarchyError`` reason and the
+   outer-key table field), and docs/architecture.md must describe
+   ``HierarchicalTarget`` — the outer-mesh composition cannot change
+   undocumented.
+7. **Serving coverage**: docs/serving.md must exist and document the
    paged serving surface (``PagedServeEngine``, ``PagedKVCache``, the
    ``Scheduler``, the block table, the AOT zero-recompile invariant and
    the ``bench_serving`` load generator), and docs/architecture.md must
@@ -47,9 +53,14 @@ SYSTOLIC_DOC = ROOT / "docs" / "systolic.md"
 AUTOTUNE_DOC = ROOT / "docs" / "autotune.md"
 FUSION_DOC = ROOT / "docs" / "fusion.md"
 SERVING_DOC = ROOT / "docs" / "serving.md"
+HIERARCHY_DOC = ROOT / "docs" / "hierarchy.md"
 SERVING_TERMS = ("PagedServeEngine", "PagedKVCache", "Scheduler",
                  "block table", "bench_serving", "AOT")
 PLAN_MODES = ("modelled", "cached", "measured")
+HIERARCHY_TERMS = ("HierarchicalTarget", "HierarchicalPlan",
+                   "SERVING_HIERARCHICAL_TARGET")
+HIERARCHY_REASONS = ("outer-divisibility", "halo-exceeds-outer-shard",
+                     "flow", "unsupported")
 
 # [text](target) — excluding images handled the same way is fine too
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
@@ -226,6 +237,34 @@ def check_autotune_docs() -> list[str]:
     return errors
 
 
+def check_hierarchy_docs() -> list[str]:
+    if not HIERARCHY_DOC.exists():
+        return ["docs/hierarchy.md missing (hierarchy coverage check)"]
+    errors = []
+    text = HIERARCHY_DOC.read_text(encoding="utf-8")
+    for term in HIERARCHY_TERMS:
+        if term not in text:
+            errors.append(
+                f"docs/hierarchy.md: {term!r} is not documented "
+                "(two-level planning surface)")
+    for reason in HIERARCHY_REASONS:
+        if f"`{reason}`" not in text:
+            errors.append(
+                f"docs/hierarchy.md: HierarchyError reason {reason!r} is "
+                "not documented (typed-rejection contract)")
+    if "outer" not in text or "default_autotune.json" not in text:
+        errors.append(
+            "docs/hierarchy.md: the hierarchical autotune-key field and "
+            "the committed table coverage are not documented")
+    if ARCHITECTURE.exists():
+        arch = ARCHITECTURE.read_text(encoding="utf-8")
+        if "HierarchicalTarget" not in arch:
+            errors.append(
+                "docs/architecture.md: HierarchicalTarget (the two-level "
+                "planning surface) is not documented")
+    return errors
+
+
 def check_serving_docs() -> list[str]:
     if not SERVING_DOC.exists():
         return ["docs/serving.md missing (serving coverage check)"]
@@ -252,7 +291,7 @@ def main() -> int:
     errors = (check_links() + check_registry_coverage(names)
               + check_systolic_coverage(hooked)
               + check_fusion_coverage(capable) + check_autotune_docs()
-              + check_serving_docs())
+              + check_hierarchy_docs() + check_serving_docs())
     for e in errors:
         print(f"FAIL {e}")
     n_links = sum(

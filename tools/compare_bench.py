@@ -1,6 +1,6 @@
 #!/usr/bin/env python
 """Bench-regression gate: compare a fresh ``benchmarks/run.py --ci`` JSON
-against the committed baseline (``benchmarks/BENCH_PR8.json``).
+against the committed baseline (``benchmarks/BENCH_PR9.json``).
 
 Timings from different machines are not comparable raw, so the gate is
 *machine-normalized*: it computes the per-spec ratio new/baseline, takes
@@ -29,6 +29,21 @@ deterministically as well:
   * fused vs unfused timings come from the *same* fresh run, so no
     machine normalization applies: ``speedup`` must stay > 1.0.
 
+The ``hierarchy`` section (two-level serving GEMMs vs the flat
+single-mesh plan, schema 5) gates:
+
+  * a hierarchical case present in the baseline may not go missing;
+  * ``hierarchical`` may not flip true -> false (planning fell back
+    from the two-level composition to the flat plan: a routing
+    regression);
+  * ``autotune_hit`` may not flip true -> false (the case lost its
+    hierarchical key in the committed crossover table);
+  * ``outer_collective_bytes`` may not grow — the modelled outer
+    traffic is a deterministic function of the chosen split, so growth
+    means the planner picked a worse outer decomposition;
+  * ``us_per_call`` is machine-normalized by the spec-suite median
+    factor and fails beyond ``--tolerance``, like spec timings.
+
 The ``serving`` section (paged vs slot engine at one smoke arrival
 rate, schema 4) gates:
 
@@ -44,7 +59,7 @@ rate, schema 4) gates:
     the ordering gates raw: paged ``tokens_per_sec`` must stay strictly
     above slot's (the continuous-batching win is the point of the row).
 
-    python tools/compare_bench.py benchmarks/BENCH_PR8.json BENCH_NEW.json
+    python tools/compare_bench.py benchmarks/BENCH_PR9.json BENCH_NEW.json
 
 Exit code 0 = within tolerance, 1 = regression.  Dependency-free.
 """
@@ -117,7 +132,58 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
                     f"{name}: {rel:.2f}x slower than the suite median "
                     f"(tolerance {tolerance:.1f}x)")
     errors += compare_chains(baseline, fresh)
+    errors += compare_hierarchy(baseline, fresh, med, tolerance)
     errors += compare_serving(baseline, fresh, med, tolerance)
+    return errors
+
+
+def compare_hierarchy(baseline: dict, fresh: dict, machine_factor: float,
+                      tolerance: float) -> list[str]:
+    """Gates for the two-level serving-GEMM rows (docstring above)."""
+    errors: list[str] = []
+    base = baseline.get("hierarchy", {})
+    new = fresh.get("hierarchy", {})
+    for name in sorted(set(base) - set(new)):
+        errors.append(
+            f"hierarchy {name}: in baseline but missing from fresh run")
+    for name in sorted(set(base) & set(new)):
+        b, n = base[name], new[name]
+        print(f"  hierarchy {name:6s} split={n.get('outer_split')} "
+              f"bytes={n.get('outer_collective_bytes')} "
+              f"hier={n.get('us_per_call', 0):10.1f}us "
+              f"flat={n.get('flat_us_per_call', 0):10.1f}us "
+              f"backend={n.get('backend')}"
+              f"[{'hit' if n.get('autotune_hit') else 'miss'}]")
+        if b.get("hierarchical", False) and not n.get("hierarchical",
+                                                      False):
+            errors.append(
+                f"hierarchy {name}: planned two-level in the baseline "
+                "but the fresh run fell back to the flat plan (outer-"
+                "split legality or routing regression)")
+            continue
+        if b.get("autotune_hit", False) and not n.get("autotune_hit",
+                                                      False):
+            errors.append(
+                f"hierarchy {name}: autotune table hit became a miss — "
+                "the case lost its hierarchical key in the committed "
+                "crossover table (regenerate with tools/gen_autotune.py "
+                "--merge)")
+        if (n.get("outer_collective_bytes", 0)
+                > b.get("outer_collective_bytes", 0)):
+            errors.append(
+                f"hierarchy {name}: outer collective bytes grew "
+                f"{b.get('outer_collective_bytes')} -> "
+                f"{n.get('outer_collective_bytes')} (the planner picked "
+                "a worse outer split; deterministic, no normalization "
+                "applies)")
+        if b.get("us_per_call", 0) > 0:
+            rel = (n.get("us_per_call", 0) / b["us_per_call"]) / max(
+                machine_factor, 1e-9)
+            if rel > tolerance:
+                errors.append(
+                    f"hierarchy {name}: {rel:.2f}x slower than the "
+                    f"machine-normalized baseline (tolerance "
+                    f"{tolerance:.1f}x)")
     return errors
 
 
@@ -214,7 +280,7 @@ def compare_chains(baseline: dict, fresh: dict) -> list[str]:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("baseline", help="committed BENCH_PR8.json")
+    ap.add_argument("baseline", help="committed BENCH_PR9.json")
     ap.add_argument("fresh", help="fresh run.py --ci output")
     ap.add_argument("--tolerance", type=float, default=2.0,
                     help="allowed per-spec slowdown relative to the "

@@ -20,9 +20,21 @@ GEMMs are raced at the smoke proxy and keyed at their real shapes, and
 the non-GLU MLP up→down projection pairs land as **fused-chain**
 entries (``mm+mm|...`` keys, raced at their real shapes).
 
+Two-level plans add one more key family: ``--hierarchy`` (on by
+default) races each serving GEMM shape under the serving hierarchical
+target (outer ``dp x tp`` Megatron mesh x inner chip mesh, see
+``docs/hierarchy.md``) and records entries under the five-field
+``...|outer{dp}x{tp}|mesh{R}x{C}`` keys ``best_plan`` looks up when the
+facade is configured with a ``HierarchicalTarget``.  Shapes with no
+legal outer split are skipped, not errors.  ``--merge`` loads the
+existing table at ``--out`` and only adds missing keys (existing
+entries stay byte-identical — the mode used to grow the committed table
+without re-racing it on a different machine).
+
     PYTHONPATH=src python tools/gen_autotune.py \
         [--out src/repro/core/default_autotune.json] [--reps 3] \
-        [--serving | --no-serving]
+        [--serving | --no-serving] [--hierarchy | --no-hierarchy] \
+        [--merge]
 """
 
 from __future__ import annotations
@@ -69,6 +81,47 @@ def serving_cases() -> tuple[tuple, tuple]:
     return tuple(extra), tuple(chains)
 
 
+def hierarchy_entries(cases: tuple, policy, skip: set[str] = frozenset(),
+                      reject_log: list | None = None) -> dict:
+    """Race each serving GEMM case under the serving hierarchical target
+    and return ``{five-field key: entry}``.
+
+    Chip backends only enter the race when the host exposes
+    ``dp*tp*R*C`` devices (``autotune.available_backends`` dispatches on
+    the target kind); on a 1-CPU generator host that means pallas vs
+    xla, which is exactly what serving resolves on the same host.
+    Shapes with no legal outer split (``HierarchyError``) are skipped.
+    """
+    from repro.core import autotune
+    from repro.core.hierarchy import (HierarchyError,
+                                      SERVING_HIERARCHICAL_TARGET)
+    from repro.kernels import registry
+
+    ht = SERVING_HIERARCHICAL_TARGET
+    out: dict[str, dict] = {}
+    for kind, args, dtype in cases:
+        if "+" in kind:
+            continue  # chains never compose hierarchically
+        spec = registry.get(kind)
+        rec = spec.builder(*args, dtype)
+        key = autotune.autotune_key(rec, ht.mesh_shape,
+                                    outer_shape=ht.outer_shape)
+        if key in skip or key in out:
+            continue
+        try:
+            entry = autotune.race(rec, ht, policy)
+        except (HierarchyError, RuntimeError) as e:
+            if reject_log is not None:
+                reject_log.append((key, str(e)))
+            print(f"  hier  {kind:13s} {dtype:8s} {args} skipped: {e}")
+            continue
+        out[key] = entry
+        print(f"  raced hier {kind:8s} {dtype:8s} outer"
+              f"{'x'.join(str(o) for o in ht.outer_shape)} "
+              f"-> {entry['backend']:6s} {entry['us']}")
+    return out
+
+
 def main() -> int:
     from repro.core import autotune
 
@@ -85,6 +138,14 @@ def main() -> int:
                     default=True,
                     help="also cover the model stack's serving GEMM "
                          "shapes and fused MLP-pair chains (default on)")
+    ap.add_argument("--hierarchy", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="also race the serving GEMM shapes under the "
+                         "serving hierarchical target (two-level "
+                         "outer|mesh keys, default on)")
+    ap.add_argument("--merge", action="store_true",
+                    help="load the existing table at --out and only add "
+                         "missing keys (existing entries untouched)")
     args = ap.parse_args()
 
     meshes = (tuple(tuple(int(d) for d in m.split("x"))
@@ -93,14 +154,27 @@ def main() -> int:
     policy = autotune.PlanPolicy(mode="measured", reps=args.reps,
                                  warmup=args.warmup)
     extra_cases, chain_cases = ((), ())
-    if args.serving:
+    if args.serving or args.hierarchy:
         extra_cases, chain_cases = serving_cases()
         print(f"gen_autotune: serving census -> {len(extra_cases)} GEMM "
               f"shapes, {len(chain_cases)} fused chains")
-    print(f"gen_autotune: racing backends for meshes {meshes} ...")
-    table = autotune.build_default_table(meshes=meshes, policy=policy,
-                                         extra_cases=extra_cases,
-                                         chain_cases=chain_cases)
+    if args.merge:
+        import copy
+
+        # load_table memoizes by (path, mtime): copy before mutating
+        table = copy.deepcopy(autotune.load_table(args.out))
+        print(f"gen_autotune: merge mode — keeping "
+              f"{len(table['entries'])} existing entries")
+    else:
+        print(f"gen_autotune: racing backends for meshes {meshes} ...")
+        table = autotune.build_default_table(meshes=meshes, policy=policy,
+                                             extra_cases=extra_cases,
+                                             chain_cases=chain_cases)
+    if args.hierarchy:
+        print("gen_autotune: racing serving GEMMs under the hierarchical "
+              "target ...")
+        table["entries"].update(hierarchy_entries(
+            extra_cases, policy, skip=set(table["entries"])))
     autotune.save_table(args.out, table)
     n = len(table["entries"])
     winners: dict[str, int] = {}
