@@ -136,18 +136,17 @@ def build_engine(arch: str, kind: str, *, max_lanes: int = 4,
 
     from repro.configs import get_smoke_config
     from repro.models import build_model
-    from repro.serve import PagedServeEngine, ServeEngine
+    from repro.serve import make_engine
 
     cfg = get_smoke_config(arch)
     params = build_model(cfg).init(jax.random.PRNGKey(seed))
     if kind == "paged":
-        eng = PagedServeEngine(cfg, max_lanes=max_lanes, max_seq=max_seq,
-                               block_size=block_size,
-                               num_blocks=num_blocks)
-    elif kind == "slot":
-        eng = ServeEngine(cfg, max_slots=max_lanes, max_seq=max_seq)
+        eng = make_engine(cfg, kind=kind, max_lanes=max_lanes,
+                          max_seq=max_seq, block_size=block_size,
+                          num_blocks=num_blocks)
     else:
-        raise ValueError(f"unknown engine kind {kind!r}")
+        eng = make_engine(cfg, kind=kind, max_slots=max_lanes,
+                          max_seq=max_seq)
     eng.load(params)
     return cfg, eng
 

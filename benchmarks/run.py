@@ -15,12 +15,20 @@ the committed autotune crossover table under ``PlanPolicy(mode="cached")``
 hit — and execution dispatches to that winner.  Schema 5 adds
 **hierarchical rows**: each serving GEMM case planned under the
 two-level serving target vs the flat single-mesh plan, with the
-modelled outer collective bytes gated exactly.  CI compares the fresh
-file against the committed ``benchmarks/BENCH_PR9.json`` baseline with
-``tools/compare_bench.py`` (ratios are machine-normalized, so only real
->2x per-spec regressions fail the gate; a fused chain case flipping
-back to unfused, a hierarchical row flipping back to flat, growing HBM
-round trips or outer collective bytes fail deterministically).
+modelled outer collective bytes gated exactly.  Schema 6 adds
+**streaming rows**: the planned audio frontend (FIR -> fused fft2d
+chain -> conv2d) vs the same math with the facade disabled, the
+chunked-admission first-logits latency vs the offline whole-utterance
+path, and the paged engine's steady-state retrace counters over an
+identical second audio stream (decode compiles pinned at 1, plan-cache
+misses / measure calls / prefill compiles pinned at 0).  CI compares
+the fresh file against the committed ``benchmarks/BENCH_PR10.json``
+baseline with ``tools/compare_bench.py`` (ratios are
+machine-normalized, so only real >2x per-spec regressions fail the
+gate; a fused chain case flipping back to unfused, a hierarchical row
+flipping back to flat, growing HBM round trips or outer collective
+bytes, a frontend site losing its plan, or any steady-state streaming
+retrace fail deterministically).
 
     PYTHONPATH=src python benchmarks/run.py --ci --out BENCH_NEW.json
 """
@@ -121,21 +129,25 @@ def ci_bench(out_path: str) -> dict:
     chains_out = _ci_bench_chains(target, policy, rng)
     hierarchy_out = _ci_bench_hierarchy(policy, rng)
     serving_out = _ci_bench_serving()
+    streaming_out = _ci_bench_streaming()
     payload = {
-        "schema": 5,
+        "schema": 6,
         "note": ("per-spec smoke timings (interpret mode, autotuned "
                  "backend) + plan-cache/autotune counters + HBM "
                  "round-trip counts, plus fused-chain rows (fused vs "
                  "unfused stage launches), hierarchical rows (two-level "
                  "serving GEMMs vs the flat single-mesh plan: outer "
-                 "collective bytes gate exactly) and serving rows "
-                 "(paged vs slot engine at one smoke arrival rate); "
-                 "compare with tools/compare_bench.py, never raw "
-                 "across machines"),
+                 "collective bytes gate exactly), serving rows "
+                 "(paged vs slot engine at one smoke arrival rate) and "
+                 "streaming rows (planned audio frontend vs XLA, "
+                 "chunked vs offline first-frame latency, steady-state "
+                 "retrace counters gated exactly); compare with "
+                 "tools/compare_bench.py, never raw across machines"),
         "specs": specs_out,
         "chains": chains_out,
         "hierarchy": hierarchy_out,
         "serving": serving_out,
+        "streaming": streaming_out,
     }
     with open(out_path, "w", encoding="utf-8") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
@@ -374,6 +386,155 @@ def _ci_bench_serving() -> dict:
     return out
 
 
+#: Streaming smoke workload: the audio-frontend chunk pipeline plus a
+#: paged whisper-base engine fed the identical audio stream twice — the
+#: second drain is the zero-retrace steady state the gate pins.
+CI_STREAMING_CASE = dict(arch="whisper-base", chunks=4, max_new=4,
+                         lanes=2, max_seq=64, block_size=8, seed=0)
+
+
+def _ci_bench_streaming() -> dict:
+    """Streaming audio rows for the gate (schema 6).
+
+    * ``frontend`` — one chunk through the planned FIR -> fused fft2d
+      chain -> conv2d pipeline vs the *same* math traced with the facade
+      disabled (pure XLA reference lowering).  ``speedup`` is a same-run
+      ratio (no machine normalization); ``planned_sites`` counts the
+      ``frontend.*`` report sites that actually planned with zero
+      fallbacks — it may not drop, or the frontend silently stopped
+      exercising the mapping pipeline.
+    * ``first_frame`` — time-to-first-logits of the chunked admission
+      path (ONE chunk of frontend + encoder + the decoder prompt pass
+      against the partial enc cache) vs the offline whole-utterance path
+      (every chunk before any decode).  Decode genuinely starts before
+      the utterance ends iff ``ratio`` (offline/chunked) stays > 1;
+      same-run, gated raw.
+    * ``serving`` — a paged whisper-base engine drains one audio stream
+      end to end (warm pass: every per-chunk jit compiles), then drains
+      an identical second stream.  Plan-cache misses, autotune
+      measurements and prefill/decode compiles across the second drain
+      are the steady-state counters — deterministic, gated exactly at
+      zero, with ``decode_compiles`` pinned at 1 for the engine's life.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.core.autotune import counters
+    from repro.core.mapper import plan_cache_info
+    from repro.kernels import planned
+    from repro.models import build_model
+    from repro.models import encdec
+    from repro.models.model import cache_dtype_of
+    from repro.serve import AudioFrontend, FrontendConfig, synth_samples
+    try:
+        from benchmarks.bench_serving import build_engine
+    except ModuleNotFoundError:
+        from bench_serving import build_engine
+
+    case = dict(CI_STREAMING_CASE)
+    arch = case["arch"]
+    cfg = get_smoke_config(arch)
+    fc = FrontendConfig(d_model=cfg.d_model)
+    samples = synth_samples(fc, case["chunks"], seed=case["seed"])
+
+    def timed(fn, reps=3):
+        fn()  # compile outside the timed loop
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fn()
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    # frontend: fresh trace per facade mode (the jit caches the facade
+    # decision at trace time, so each mode needs its own AudioFrontend)
+    fe = AudioFrontend(fc)
+    chunk = jnp.asarray(fe.split(samples)[0])
+    carry = fe.init_state()
+    before = planned.planned_report()
+    jax.block_until_ready(fe.chunk_features(carry, chunk))
+    delta = planned.report_delta(before, planned.planned_report())
+    planned_sites = sum(
+        1 for site, row in delta.items()
+        if site.startswith("frontend.") and row.get("planned", 0) > 0
+        and row.get("fallback", 0) == 0)
+    planned_us = timed(lambda: jax.block_until_ready(
+        fe.chunk_features(carry, chunk)))
+    fe_xla = AudioFrontend(fc)
+    with planned.override(enabled=False):
+        jax.block_until_ready(fe_xla.chunk_features(carry, chunk))
+    xla_us = timed(lambda: jax.block_until_ready(
+        fe_xla.chunk_features(carry, chunk)))
+    frontend_row = {
+        "dtype": fc.dtype,
+        "planned_us": round(planned_us, 1),
+        "xla_us": round(xla_us, 1),
+        "speedup": round(xla_us / planned_us, 3),
+        "planned_sites": planned_sites,
+    }
+    print(f"ci-bench stream frontend   {fc.dtype:8s} "
+          f"planned={planned_us:8.1f}us xla={xla_us:8.1f}us "
+          f"x{frontend_row['speedup']:.2f} sites={planned_sites}")
+
+    # first frame: chunked admission vs offline whole-utterance prefill
+    params = build_model(cfg).init(jax.random.PRNGKey(42))
+    cdt = cache_dtype_of(cfg)
+    C = fc.frames_per_chunk
+    tokens = jnp.zeros((1, 1), jnp.int32)
+    max_seq = case["max_seq"]
+
+    def first_chunked():
+        _, feats = fe.chunk_features(fe.init_state(), chunk)
+        logits, _, _ = encdec.prefill_streaming(
+            params, cfg, feats[None], tokens, max_seq, C, cache_dtype=cdt)
+        jax.block_until_ready(logits)
+
+    def first_offline():
+        feats = fe.offline_features(samples)
+        logits, _, _ = encdec.prefill_streaming(
+            params, cfg, feats[None], tokens, max_seq, C, cache_dtype=cdt)
+        jax.block_until_ready(logits)
+
+    chunked_us = timed(first_chunked)
+    offline_us = timed(first_offline)
+    first_frame_row = {
+        "chunks": case["chunks"],
+        "chunked_us": round(chunked_us, 1),
+        "offline_us": round(offline_us, 1),
+        "ratio": round(offline_us / chunked_us, 3),
+    }
+    print(f"ci-bench stream first-frame chunked={chunked_us:8.1f}us "
+          f"offline={offline_us:8.1f}us x{first_frame_row['ratio']:.2f}")
+
+    # serving steady state: identical second stream must retrace nothing
+    _, eng = build_engine(arch, "paged", max_lanes=case["lanes"],
+                          max_seq=case["max_seq"],
+                          block_size=case["block_size"])
+    eng.submit_audio_stream(samples, max_new_tokens=case["max_new"])
+    eng.run_until_drained()
+    m0 = plan_cache_info().misses
+    a0 = counters()["measure_calls"]
+    pc0 = eng.stats["prefill_compiles"]
+    eng.submit_audio_stream(samples, max_new_tokens=case["max_new"])
+    eng.run_until_drained()
+    serving_row = {
+        "arch": arch,
+        "decode_compiles": int(eng.stats["decode_compiles"]),
+        "steady_plan_misses": int(plan_cache_info().misses - m0),
+        "steady_measure_calls": int(counters()["measure_calls"] - a0),
+        "steady_prefill_compiles": int(eng.stats["prefill_compiles"] - pc0),
+        "tokens": len(eng.finished[-1].output),
+    }
+    print(f"ci-bench stream serving    {arch:13s} "
+          f"decode_compiles={serving_row['decode_compiles']} "
+          f"steady misses={serving_row['steady_plan_misses']} "
+          f"measures={serving_row['steady_measure_calls']} "
+          f"prefill_compiles={serving_row['steady_prefill_compiles']}")
+    return {"frontend": frontend_row, "first_frame": first_frame_row,
+            "serving": serving_row}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all")
@@ -382,7 +543,7 @@ def main() -> None:
                          "smoke timings + plan-cache counters as JSON")
     ap.add_argument("--out", default="BENCH_NEW.json",
                     help="output path for --ci (pass "
-                         "benchmarks/BENCH_PR9.json explicitly when "
+                         "benchmarks/BENCH_PR10.json explicitly when "
                          "refreshing the committed baseline)")
     args = ap.parse_args()
     if args.ci:

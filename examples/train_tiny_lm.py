@@ -9,18 +9,17 @@ Loss decreases on the synthetic Markov stream.
 
 import argparse
 import dataclasses
-import os
 
 # This example trains a ~100M-param model on CPU, where the planned
 # Pallas kernels run in interpret mode (10-40x slower than XLA) — at this
 # size that turns a ~3-minute run into an hour.  Default to the facade's
 # XLA fallback here (the planned path is exercised by the test suite,
-# bench_planned and the serve smoke); export REPRO_PLANNED=on to force
-# mapper-planned kernels anyway, e.g. on a real TPU.
+# bench_planned and the serve smoke); call planned.configure(enabled=True)
+# before Trainer construction to force mapper-planned kernels anyway,
+# e.g. on a real TPU.
 from repro.kernels import planned
 
-if os.environ.get(planned.PLANNED_ENV) is None:
-    planned.configure(enabled=False)
+planned.configure(enabled=False)
 
 from repro.configs import get_config
 from repro.configs.base import ShapeSpec

@@ -17,14 +17,10 @@ Configuration is one call (no env-var sprawl):
     with planned.override(enabled=False):   # scoped: restores on exit
         ...
 
-``REPRO_PLANNED=off`` remains as a *deprecated* alias consulted only
-when ``configure`` was never called; it emits a DeprecationWarning once
-per process.
-
 Fallback rules (all land on the registry's XLA reference lowering, so the
 two paths are interchangeable):
 
-  * planning disabled (``configure(enabled=False)`` / the env alias);
+  * planning disabled (``configure(enabled=False)``);
   * dtypes the MXU contract does not cover (or mismatched operand dtypes);
   * shapes the mapper cannot produce a *feasible* plan for (degenerate
     extents, ragged heads, tiny decode dims that defeat the PLIO model).
@@ -48,8 +44,6 @@ import contextlib
 import dataclasses
 import functools
 import math
-import os
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -58,11 +52,6 @@ from repro.core.autotune import PlanPolicy, PlanRequest, resolve
 from repro.core.mapper import ExecutionPlan, Target
 
 from . import ref
-
-#: Deprecated environment alias: set REPRO_PLANNED=off to force XLA
-#: everywhere *when configure() was never called*.  Prefer configure().
-PLANNED_ENV = "REPRO_PLANNED"
-_OFF = frozenset({"off", "0", "false", "no"})
 
 #: Single-chip execution target for facade call sites.  A 1x8 sub-array is
 #: the smallest geometry on which the PLIO/congestion model produces
@@ -99,9 +88,8 @@ class PlannedConfig:
     target: Target | None = None
 
 
-#: None = configure() never called -> defaults + the deprecated env alias.
+#: None = configure() never called -> defaults.
 _CONFIG: PlannedConfig | None = None
-_ENV_WARNED = False
 
 #: configure()/override() sentinel: "leave this field alone" — distinct
 #: from None, which for ``target`` means "back to PLANNED_TARGET".
@@ -113,8 +101,7 @@ def configure(enabled: bool | None = None,
               target=_UNSET) -> PlannedConfig:
     """Set the facade configuration; unspecified fields keep their
     current effective value (``target=None`` explicitly resets to the
-    single-chip default).  Returns the new config.  Once called, the
-    deprecated ``REPRO_PLANNED`` env alias is ignored."""
+    single-chip default).  Returns the new config."""
     global _CONFIG
     base = current_config()
     _CONFIG = PlannedConfig(
@@ -140,36 +127,15 @@ def override(enabled: bool | None = None,
 
 
 def reset_configuration() -> None:
-    """Back to "never configured" (defaults + env alias) — test hook."""
+    """Back to "never configured" (defaults) — test hook."""
     global _CONFIG
     _CONFIG = None
 
 
-def _env_enabled() -> bool | None:
-    """The deprecated REPRO_PLANNED alias; warns once per process."""
-    global _ENV_WARNED
-    raw = os.environ.get(PLANNED_ENV)
-    if raw is None:
-        return None
-    if not _ENV_WARNED:
-        _ENV_WARNED = True
-        warnings.warn(
-            f"{PLANNED_ENV} is deprecated; call "
-            "repro.kernels.planned.configure(enabled=...) (or the "
-            "override() context manager) instead",
-            DeprecationWarning, stacklevel=3)
-    return raw.strip().lower() not in _OFF
-
-
 def current_config() -> PlannedConfig:
     """The effective configuration: explicit ``configure`` wins, else
-    the env alias (deprecated), else the defaults."""
-    if _CONFIG is not None:
-        return _CONFIG
-    env = _env_enabled()
-    if env is None:
-        return PlannedConfig()
-    return PlannedConfig(enabled=env)
+    the defaults."""
+    return _CONFIG if _CONFIG is not None else PlannedConfig()
 
 
 def planned_enabled() -> bool:
@@ -583,3 +549,79 @@ def planned_mlp_pair(x, wu, bu, wd, *, act: str = "gelu",
         return planned_dense(h, wd, site="mlp.down")
     out = _mlp_pair_planned(site, act, x.reshape(m, k), wu, bu, wd)
     return out.reshape(*lead, n)
+
+
+# -- signal-processing frontend (fir / fused fft2d chain / conv2d) ----------
+#
+# The streaming audio frontend (serve/frontend.py) runs its filter bank,
+# FFT tiles, and feature extractor through these — the same
+# resolve(plan_request(...)) path as the model GEMMs, with per-site
+# report rows — which is how the serving stack proves the "uniform
+# recurrences" claim outside GEMM-land.  Inference-only surfaces: no
+# custom_vjp (the frontend never trains).
+
+def planned_fir(x, h, *, site: str = "frontend.fir"):
+    """1-D FIR filter bank ``y[n] = sum_t x[n+t] * h[t]`` routed through
+    the mapper.
+
+    ``x``: [N]; ``h``: [T]; returns [N-T+1] in the registered kernel's
+    accumulator dtype (int32 for int inputs, float32 for floats) —
+    identical to ``ref.fir``, so planned and fallback paths agree.
+    """
+    n_out = int(x.shape[-1]) - int(h.shape[-1]) + 1
+    taps = int(h.shape[-1])
+    plan, reason = _decide("fir", (n_out, taps), x.dtype, h.dtype)
+    _record(site, (n_out, taps), plan=plan, reason=reason)
+    if plan is None:
+        return ref.fir(x, h)
+    return _execute(plan, x, h)
+
+
+def planned_conv2d(img, filt, *, site: str = "frontend.conv2d"):
+    """VALID 2-D cross-correlation routed through the mapper.
+
+    ``img``: [H, W]; ``filt``: [P, Q]; returns [H-P+1, W-Q+1] in the
+    accumulator dtype (int32 for int inputs, float32 for floats).
+    """
+    p, q = (int(d) for d in filt.shape)
+    oh = int(img.shape[0]) - p + 1
+    ow = int(img.shape[1]) - q + 1
+    plan, reason = _decide("conv2d", (oh, ow, p, q), img.dtype, filt.dtype)
+    _record(site, (oh, ow, p, q), plan=plan, reason=reason)
+    if plan is None:
+        return ref.conv2d(img, filt)
+    return _execute(plan, img, filt)
+
+
+def _decide_fft2d(rows: int, cols: int, dtypes):
+    """(FusedPlan, fallback_reason) for one fft2d stage1->stage2 chain."""
+    if not planned_enabled():
+        return None, "disabled"
+    names = sorted({jnp.dtype(d).name for d in dtypes})
+    if names != ["float32"]:
+        return None, "dtype:" + "x".join(names)
+    shape = ((rows, cols), (rows, cols))
+    _OBSERVED.add(("fft2d_stage+fft2d_stage", shape, "float32"))
+    plan = resolve(plan_request("fft2d_stage+fft2d_stage", shape, "float32"))
+    if plan is None:
+        return None, "infeasible"
+    return plan, None
+
+
+def planned_fft2d(x_re, x_im, *, site: str = "frontend.fft2d"):
+    """Whole 2-D FFT of one [rows, cols] tile, planned as the fused
+    ``fft2d_stage+fft2d_stage`` chain (row pass -> column pass sharing
+    one pre-skew, intermediate shard-resident — see docs/fusion.md).
+
+    ``x_re``/``x_im``: float32 [rows, cols] planes; returns the
+    ``(real, imag)`` float32 pair, identical to ``ref.fft2d``.
+    """
+    from repro.core import fusion  # late: core.fusion pulls the registry
+
+    rows, cols = (int(d) for d in x_re.shape)
+    plan, reason = _decide_fft2d(rows, cols, (x_re.dtype, x_im.dtype))
+    _record(site, ((rows, cols), (rows, cols)), plan=plan, reason=reason)
+    if plan is None:
+        return ref.fft2d(x_re, x_im)
+    backend = plan.backend if plan.backend in ("xla", "pallas") else "xla"
+    return fusion.lower_fused(plan, backend=backend)(x_re, x_im)

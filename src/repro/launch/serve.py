@@ -1,7 +1,12 @@
 """Serving launcher CLI.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-        --requests 16 --max-new 8 [--engine paged]
+        --requests 16 --max-new 8 [--engine paged] [--stream-audio]
+
+``--stream-audio`` (encdec archs) submits synthesized raw-audio
+requests that stream through the planned frontend chunk by chunk —
+the CI smoke for chunked admission, pinning ``decode_compiles == 1``
+and ``measure_calls == 0`` while streaming.
 """
 
 from __future__ import annotations
@@ -24,33 +29,48 @@ def main():
     ap.add_argument("--engine", default="slot", choices=["slot", "paged"])
     ap.add_argument("--block-size", type=int, default=16,
                     help="KV block granularity (paged engine)")
+    ap.add_argument("--stream-audio", action="store_true",
+                    help="submit synthesized audio streams through the "
+                         "planned frontend (encdec archs only)")
     args = ap.parse_args()
 
     from repro.configs import get_smoke_config
     from repro.models import build_model
-    from repro.serve import PagedServeEngine, ServeEngine
+    from repro.serve import make_engine, synth_samples
 
     cfg = get_smoke_config(args.arch)
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
+    kw = {}
     if args.engine == "paged":
-        eng = PagedServeEngine(cfg, max_lanes=args.slots,
-                               max_seq=args.max_seq,
-                               block_size=args.block_size)
+        kw = dict(max_lanes=args.slots, block_size=args.block_size)
     else:
-        eng = ServeEngine(cfg, max_slots=args.slots, max_seq=args.max_seq)
+        kw = dict(max_slots=args.slots)
+    eng = make_engine(cfg, kind=args.engine, max_seq=args.max_seq, **kw)
     eng.load(params)
 
+    if args.stream_audio and eng.frontend is None:
+        raise SystemExit(
+            f"--stream-audio needs an encdec arch; {args.arch} has no "
+            "audio frontend")
+
     rng = np.random.default_rng(0)
-    for _ in range(args.requests):
+    for i in range(args.requests):
+        if args.stream_audio:
+            n_chunks = 1 + i % (cfg.enc_frames
+                                // eng.frontend.cfg.frames_per_chunk)
+            eng.submit_audio_stream(
+                synth_samples(eng.frontend.cfg, n_chunks, seed=i),
+                max_new_tokens=args.max_new)
+            continue
         plen = int(rng.integers(4, 16))
         extra = None
         if cfg.family == "encdec":  # audio models decode against frames
             extra = {"frames": np.asarray(jax.numpy.asarray(
                 rng.standard_normal((cfg.enc_frames, cfg.d_model)),
                 jax.numpy.bfloat16))}
-        eng.submit(rng.integers(0, cfg.vocab, plen),
-                   max_new_tokens=args.max_new, extra=extra)
+        eng.submit_text(rng.integers(0, cfg.vocab, plen),
+                        max_new_tokens=args.max_new, extra=extra)
     t0 = time.perf_counter()
     done = eng.run_until_drained()
     dt = time.perf_counter() - t0
@@ -75,6 +95,13 @@ def main():
         print(f"paged stats: {eng.stats}")
         assert eng.stats["decode_compiles"] == 1, \
             "in-flight traffic recompiled the AOT decode executable"
+    if args.stream_audio:
+        # the streaming invariants CI pins: chunk feeds never touch the
+        # decode executable, and the frontend's planned stages ran
+        front = [s for s, n, _, _, _ in rows
+                 if s.startswith("frontend.") and n]
+        assert front, "audio streaming executed no planned frontend stages"
+        print(f"planned frontend stages: {sorted(front)}")
     if planned_enabled():
         assert any(n for _, n, _, _, _ in rows), \
             "serving executed no planned GEMMs"

@@ -6,8 +6,8 @@ matmuls are the paper's MM recurrence: projection/MLP GEMMs go through
 ``kernels.planned.planned_dense`` and the attention score/value
 contractions through ``planned_bmm``, so every dense/attention/decode GEMM
 executes on mapper-planned tiles (with an XLA fallback for shapes the
-mapper rejects and a ``REPRO_PLANNED=off`` escape hatch).  Chip-level
-sharding still comes from parallel.sharding rules.
+mapper rejects and a ``planned.configure(enabled=False)`` escape hatch).
+Chip-level sharding still comes from parallel.sharding rules.
 """
 
 from __future__ import annotations
@@ -164,20 +164,39 @@ def _gqa_values(w, v, site):
     return out.reshape(b, hkv, group, sq, hd).transpose(0, 3, 1, 2, 4)
 
 
-def sdpa(q, k, v, *, causal: bool, q_offset=None):
-    """q: [B,Sq,Hq,hd]; k/v: [B,Skv,Hkv,hd] (GQA broadcast)."""
+def sdpa(q, k, v, *, causal: bool, q_offset=None, kv_len=None,
+         chunk=None):
+    """q: [B,Sq,Hq,hd]; k/v: [B,Skv,Hkv,hd] (GQA broadcast).
+
+    ``kv_len`` ([B] int32, optional) masks key rows at positions
+    ``>= kv_len[b]`` — the streaming cross-attention contract: a padded
+    enc K/V cache only partially filled contributes exact zeros for the
+    unwritten tail (same -1e30 trick as the decode mask, so a full cache
+    with ``kv_len == Skv`` is bitwise identical to no mask).
+
+    ``chunk`` (int, optional) applies a block-causal mask on top:
+    query position ``qp`` sees key position ``kp`` iff
+    ``qp // chunk >= kp // chunk`` — full attention inside a chunk plus
+    all earlier chunks, the streaming encoder's self-attention pattern.
+    """
     b, sq, hq, hd = q.shape
     skv, hkv = k.shape[1], k.shape[2]
     group = hq // hkv
     qg = q.reshape(b, sq, hkv, group, hd)
     logits = _gqa_scores(qg, k, "attn.scores") / math.sqrt(hd)
+    qpos = jnp.arange(sq)[:, None] + (
+        q_offset if q_offset is not None else 0
+    )
+    kpos = jnp.arange(skv)[None, :]
     if causal:
-        qpos = jnp.arange(sq)[:, None] + (
-            q_offset if q_offset is not None else 0
-        )
-        kpos = jnp.arange(skv)[None, :]
         mask = qpos >= kpos
         logits = jnp.where(mask[None, None, None], logits, -1e30)
+    if chunk is not None:
+        bmask = (qpos // chunk) >= (kpos // chunk)
+        logits = jnp.where(bmask[None, None, None], logits, -1e30)
+    if kv_len is not None:
+        vmask = kpos < kv_len[:, None]  # [B, Skv]
+        logits = jnp.where(vmask[:, None, None, None], logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     out = _gqa_values(w, v, "attn.values")
     return out.reshape(b, sq, hq, hd)
@@ -318,11 +337,15 @@ def gqa_expand(k, hq):
 
 
 def attention_core(q, k, v, *, causal: bool, q_offset=None,
-                   block_skip: bool = False):
-    """Pick direct vs blockwise by sequence length."""
+                   block_skip: bool = False, kv_len=None, chunk=None):
+    """Pick direct vs blockwise by sequence length.  The streaming masks
+    (``kv_len``/``chunk``) only exist on the direct path — streaming
+    encoder chunks are far below the blockwise threshold."""
     sq, skv = q.shape[1], k.shape[1]
-    if max(sq, skv) <= BLOCKWISE_SEQ_THRESHOLD:
-        return sdpa(q, k, v, causal=causal, q_offset=q_offset)
+    if (kv_len is not None or chunk is not None
+            or max(sq, skv) <= BLOCKWISE_SEQ_THRESHOLD):
+        return sdpa(q, k, v, causal=causal, q_offset=q_offset,
+                    kv_len=kv_len, chunk=chunk)
     hq = q.shape[2]
     k = constrain(gqa_expand(k, hq), "batch", None, "heads", None)
     v = constrain(gqa_expand(v, hq), "batch", None, "heads", None)
@@ -330,11 +353,11 @@ def attention_core(q, k, v, *, causal: bool, q_offset=None,
                                block_skip=block_skip and causal)
 
 
-def apply_attention(p, cfg, x, positions, *, causal=True):
+def apply_attention(p, cfg, x, positions, *, causal=True, chunk=None):
     b, s, d = x.shape
     q, k, v = _qkv(p, cfg, x, positions)
     out = attention_core(q, k, v, causal=causal,
-                         block_skip=cfg.causal_block_skip)
+                         block_skip=cfg.causal_block_skip, chunk=chunk)
     out = out.reshape(b, s, cfg.n_heads * cfg.hd)
     return planned_dense(out, p["wo"], site="attn.out")
 

@@ -57,6 +57,16 @@ class ModelAPI:
     paged_init: Callable = None
     paged_decode: Callable = None
     paged_layout: Callable = None
+    # streaming (chunked) admission — encdec only.  enc_init(b, f_max)
+    # builds the incremental encoder state; enc_step(p, ec, frames_chunk)
+    # appends one chunk and returns its encoder states; enc_kv(p, enc)
+    # projects a chunk to per-decoder-layer cross K/V; stream_prefill(p,
+    # enc_k, enc_v, enc_len, tokens, max_seq, last_index) is the
+    # decoder-only prompt pass against a partially-filled enc cache.
+    enc_init: Callable = None
+    enc_step: Callable = None
+    enc_kv: Callable = None
+    stream_prefill: Callable = None
 
 
 def _token_batch_specs(cfg, shape: ShapeSpec):
@@ -192,6 +202,16 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
             paged_decode=lambda p, pools, t, bt, pos, act:
                 ENCDEC.decode_step_paged(p, cfg, pools, t, bt, pos, act),
             paged_layout=lambda: ENCDEC.paged_layout(cfg),
+            enc_init=lambda b, f_max=None: ENCDEC.init_enc_cache(
+                cfg, b, f_max),
+            enc_step=lambda p, ec, fc: ENCDEC.encode_chunk(p, cfg, ec, fc),
+            enc_kv=lambda p, enc: ENCDEC.enc_kv_chunk(
+                p, cfg, enc, cache_dtype_of(cfg)),
+            stream_prefill=lambda p, ek, ev, el, tk, ms, last_index=None:
+                ENCDEC.prefill_decoder(
+                    p, cfg, ek, ev, el, tk, ms,
+                    cache_dtype=cache_dtype_of(cfg),
+                    last_index=last_index),
         )
 
     raise ValueError(f"unknown family {cfg.family}")

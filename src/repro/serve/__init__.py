@@ -1,9 +1,13 @@
-from .engine import PagedServeEngine, Request, ServeEngine
+from .api import EngineBase, Request, make_engine, validate_request
+from .engine import PagedServeEngine, ServeEngine
+from .frontend import AudioFrontend, FrontendConfig, synth_samples
 from .paged_cache import BlockAllocator, PagedKVCache
 from .scheduler import Scheduler, SchedulerConfig
 
 __all__ = [
-    "ServeEngine", "PagedServeEngine", "Request",
+    "make_engine", "EngineBase", "Request", "validate_request",
+    "ServeEngine", "PagedServeEngine",
+    "AudioFrontend", "FrontendConfig", "synth_samples",
     "PagedKVCache", "BlockAllocator",
     "Scheduler", "SchedulerConfig",
 ]

@@ -1,6 +1,14 @@
 """Batched serving engines: fixed-slot (lite) and block-paged continuous
 batching.
 
+Both engines are ``api.EngineBase`` subclasses — the request model,
+validation, submission (``submit`` / ``submit_text`` /
+``submit_audio_stream``), drain loop, planning context, and the whole
+chunked audio-streaming machinery live once in ``serve.api``.  What
+remains here is only what genuinely differs between the two designs:
+how a prefill cache lands in device state and how decode executes.
+Construct either through ``serve.make_engine(cfg, kind=...)``.
+
 ``ServeEngine`` is the original slot engine: one stacked cache with
 ``max_slots`` batch lanes, prompts prefilled at ``max_seq`` and copied
 into free lanes.  It stays as the comparison baseline (and the simplest
@@ -25,7 +33,15 @@ continuous batching over a block-paged KV cache (``paged_cache``):
     request is preempted: its blocks free instantly, it re-queues with
     its generated tokens folded into the prompt, and recomputes on
     re-admission (output-transparent — same context, same greedy
-    tokens).
+    tokens).  Text lanes are preferred victims over streaming audio
+    lanes (an audio victim must also replay its consumed chunks).
+
+Streaming audio requests (encdec) admit after their *first* chunk:
+the planned frontend + incremental encoder produce a partial encoder
+cache, the decoder prompt prefills against it (``stream_prefill``),
+and each engine ``step()`` feeds one more chunk per streaming lane in
+place — decode output starts before the utterance ends, and the decode
+executable itself never changes shape (``decode_compiles`` stays 1).
 
 Every GEMM in both serving paths routes through ``kernels.planned``;
 ``load()`` traces/compiles up front and ``plan_report`` holds a *true
@@ -39,8 +55,6 @@ systems artifact, not a quality one.
 
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -48,70 +62,27 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import autotune
 from repro.kernels import planned
-from repro.models import build_model
 
+from .api import EngineBase, Request, validate_request  # noqa: F401
+from .api import _StreamState
 from .paged_cache import PagedKVCache
 from .scheduler import Scheduler, SchedulerConfig
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray           # [S] int32
-    max_new_tokens: int
-    extra: dict | None = None    # frames / patch embeds for audio/vlm
-    output: list = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-def _validate_request(prompt, max_new_tokens: int, max_seq: int,
-                      extra_rows: int = 0) -> None:
-    """Reject requests that would run past the sequence horizon.
-
-    ``decode_step`` advances ``pos`` unconditionally and the cache write
-    (``dynamic_update_slice``) clamps at ``max_seq`` — an overlong
-    request would silently overwrite the last cache row in place
-    instead of failing.  Refuse it at submit time."""
-    if max_new_tokens < 1:
-        raise ValueError(f"max_new_tokens must be >= 1, got "
-                         f"{max_new_tokens}")
-    total = extra_rows + len(prompt) + max_new_tokens
-    if total > max_seq:
-        raise ValueError(
-            f"request needs {total} cache rows (prompt {len(prompt)}"
-            f"{f' + {extra_rows} extra' if extra_rows else ''} + "
-            f"max_new_tokens {max_new_tokens}) > max_seq {max_seq}: "
-            "the decode write would silently clamp at the horizon, "
-            "overwriting the last cache row; raise max_seq or shorten "
-            "the request")
-
-
-class ServeEngine:
+class ServeEngine(EngineBase):
     def __init__(self, cfg: ModelConfig, *, max_slots: int = 4,
                  max_seq: int = 512, prompt_len: int | None = None,
                  policy: autotune.PlanPolicy | None = None,
-                 target=None):
-        self.cfg = cfg
-        self.policy = policy
-        # optional execution target for the serving GEMMs — pass a
-        # core.HierarchicalTarget to split them column/row-parallel over
-        # the outer tp axis (None inherits the ambient planned config)
-        self.target = target
-        self.api = build_model(cfg)
+                 target=None, frontend=None):
+        super().__init__(cfg, max_seq=max_seq, policy=policy,
+                         target=target, frontend=frontend)
         self.max_slots = max_slots
-        self.max_seq = max_seq
         self.prompt_len = prompt_len
-        self.params = None
         self.cache = None
         self.slots: list[Request | None] = [None] * max_slots
-        self.queue: list[Request] = []
-        self.finished: list[Request] = []
-        self._next_rid = 0
         self._decode_jit = jax.jit(
             lambda p, c, t: self.api.decode(p, c, t))
         self._decode_exec = None
-        self.plan_report: dict = {}
-        self.autotune_report: dict = {}
 
     def load(self, params):
         """Install weights and plan + compile the serving GEMMs up front.
@@ -154,15 +125,6 @@ class ServeEngine:
         tune1 = autotune.counters()
         self.autotune_report = {k: tune1[k] - tune0[k] for k in tune1}
 
-    def _plan_ctx(self):
-        """The planning override every trace runs under: the engine's
-        policy, plus its execution target when one was given (kept
-        ambient otherwise — an explicit None would clobber a process-
-        level ``planned.configure(target=...)``)."""
-        if self.target is not None:
-            return planned.override(policy=self.policy, target=self.target)
-        return planned.override(policy=self.policy)
-
     def _prefill_spec(self):
         """Abstract prefill batch for plan warmup — family-aware and
         dtype-matched to ``model._token_batch_specs`` so the warmed
@@ -177,24 +139,12 @@ class ServeEngine:
                 (1, self.cfg.enc_frames, self.cfg.d_model), jnp.bfloat16)
         return spec
 
-    def _extra_rows(self, extra: dict | None) -> int:
-        if extra and self.cfg.family == "vlm" and "extra_embeds" in extra:
-            return self.cfg.vlm_patches
-        return 0
-
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               extra: dict | None = None) -> int:
-        prompt = np.asarray(prompt, np.int32)
-        _validate_request(prompt, max_new_tokens, self.max_seq,
-                          self._extra_rows(extra))
-        rid = self._next_rid
-        self._next_rid += 1
-        self.queue.append(Request(rid, prompt, max_new_tokens, extra))
-        return rid
-
     # -- internals ----------------------------------------------------------
     def _free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
+
+    def _lane_request(self, lane: int) -> Request | None:
+        return self.slots[lane]
 
     def _write_lane(self, lane: int, prefill_cache):
         """Copy a single-request prefill cache into lane ``lane``.
@@ -223,15 +173,32 @@ class ServeEngine:
 
         self.cache = jax.tree.map(write, self.cache, prefill_cache)
 
+    def _append_enc(self, lane: int, ek, ev, start: int,
+                    new_len: int) -> None:
+        fns = self._stream_fns()
+        ck, cv, cl = fns["lane_append"](
+            self.cache["enc_k"], self.cache["enc_v"],
+            self.cache["enc_len"], ek, ev, lane, start, new_len)
+        self.cache = dict(self.cache, enc_k=ck, enc_v=cv, enc_len=cl)
+
     def _admit(self):
         free = self._free_slots()
         while free and self.queue:
             req = self.queue.pop(0)
-            batch = {"tokens": jnp.asarray(req.prompt[None])}
-            if req.extra:
-                batch.update(
-                    {k: jnp.asarray(v[None]) for k, v in req.extra.items()})
-            logits, pc = self.api.prefill(self.params, batch, self.max_seq)
+            stream = None
+            if req.kind == "audio":
+                ck, cv, el, ec, carry = self._stream_admit_state(req)
+                logits, pc = self.api.stream_prefill(
+                    self.params, ck, cv, el,
+                    jnp.asarray(req.prompt[None]), self.max_seq)
+                stream = (ec, carry)
+            else:
+                batch = {"tokens": jnp.asarray(req.prompt[None])}
+                if req.extra:
+                    batch.update({k: jnp.asarray(v[None])
+                                  for k, v in req.extra.items()})
+                logits, pc = self.api.prefill(
+                    self.params, batch, self.max_seq)
             first = int(jnp.argmax(logits[0]))
             req.output.append(first)
             if len(req.output) >= req.max_new_tokens:
@@ -244,14 +211,18 @@ class ServeEngine:
             lane = free.pop(0)
             self._write_lane(lane, pc)
             self.slots[lane] = req
+            if stream is not None:
+                self._streams[lane] = _StreamState(req, *stream)
 
     def step(self) -> int:
         """Admit + one decode step for all active lanes.  Returns number of
         active requests after the step."""
         with self._plan_ctx():
-            # admission prefills trace planned GEMMs at call time, so the
-            # engine's policy/target must be ambient here, not just in load
+            # admission prefills and streaming chunk feeds trace planned
+            # GEMMs at call time, so the engine's policy/target must be
+            # ambient here, not just in load
             self._admit()
+            self._feed_streams()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return len(self.queue)
@@ -269,16 +240,11 @@ class ServeEngine:
                 req.done = True
                 self.finished.append(req)
                 self.slots[i] = None
+                self._streams.pop(i, None)
         return sum(s is not None for s in self.slots) + len(self.queue)
 
-    def run_until_drained(self, max_steps: int = 1000) -> list[Request]:
-        for _ in range(max_steps):
-            if self.step() == 0 and not self.queue:
-                break
-        return self.finished
 
-
-class PagedServeEngine:
+class PagedServeEngine(EngineBase):
     """Continuous-batching engine over a block-paged KV cache.
 
     ``max_lanes`` bounds concurrent requests (the decode batch width),
@@ -296,18 +262,13 @@ class PagedServeEngine:
                  prompt_len: int | None = None,
                  policy: autotune.PlanPolicy | None = None,
                  scheduler: Scheduler | SchedulerConfig | None = None,
-                 target=None):
-        self.cfg = cfg
-        self.policy = policy
-        # as in ServeEngine: an optional (possibly hierarchical)
-        # execution target for every serving GEMM this engine traces
-        self.target = target
-        self.api = build_model(cfg)
+                 target=None, frontend=None):
+        super().__init__(cfg, max_seq=max_seq, policy=policy,
+                         target=target, frontend=frontend)
         if self.api.paged_decode is None:
             raise ValueError(
                 f"family {cfg.family!r} has no paged decode path")
         self.max_lanes = max_lanes
-        self.max_seq = max_seq
         self.block_size = block_size
         self.num_blocks = num_blocks
         self.prompt_len = prompt_len
@@ -320,18 +281,12 @@ class PagedServeEngine:
         # tokens for expert slots — both would change outputs.  those
         # families prefill at exact lengths; dense/vlm/encdec bucket.
         self._exact_prefill = cfg.family in ("ssm", "hybrid", "moe")
-        self.params = None
         self.kv: PagedKVCache | None = None
         self.lanes: list[Request | None] = [None] * max_lanes
-        self.queue: list[Request] = []
-        self.finished: list[Request] = []
-        self._next_rid = 0
         self._admit_seq = 0
         self._lane_seq: dict[int, int] = {}
         self._prefill_fns: dict = {}
         self._decode_exec = None
-        self.plan_report: dict = {}
-        self.autotune_report: dict = {}
         self.stats = {"decode_compiles": 0, "prefill_compiles": 0,
                       "preemptions": 0, "steps": 0}
 
@@ -346,7 +301,9 @@ class PagedServeEngine:
         host-side tables only, so nothing that happens in flight can
         change the compiled shapes — a ``Compiled`` object *errors* on
         aval mismatch instead of retracing, which makes "zero decode
-        recompiles" structural rather than aspirational.
+        recompiles" structural rather than aspirational.  Streaming
+        chunk feeds write into lane-resident encoder buffers through
+        their own jitted updaters — the decode executable is untouched.
 
         ``plan_report`` / ``autotune_report`` are true deltas of the
         warmup window, as in ``ServeEngine.load``.  If ``prompt_len``
@@ -394,29 +351,6 @@ class PagedServeEngine:
         tune1 = autotune.counters()
         self.autotune_report = {k: tune1[k] - tune0[k] for k in tune1}
 
-    def _plan_ctx(self):
-        """Same contract as ``ServeEngine._plan_ctx``: policy + optional
-        execution target, leaving the ambient target alone when unset."""
-        if self.target is not None:
-            return planned.override(policy=self.policy, target=self.target)
-        return planned.override(policy=self.policy)
-
-    # -- submit -------------------------------------------------------------
-    def _extra_rows(self, extra: dict | None) -> int:
-        if extra and self.cfg.family == "vlm" and "extra_embeds" in extra:
-            return self.cfg.vlm_patches
-        return 0
-
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               extra: dict | None = None) -> int:
-        prompt = np.asarray(prompt, np.int32)
-        _validate_request(prompt, max_new_tokens, self.max_seq,
-                          self._extra_rows(extra))
-        rid = self._next_rid
-        self._next_rid += 1
-        self.queue.append(Request(rid, prompt, max_new_tokens, extra))
-        return rid
-
     # -- admission ----------------------------------------------------------
     def _effective_prompt(self, req: Request) -> np.ndarray:
         """Prompt plus already-generated tokens: a preempted request
@@ -425,6 +359,18 @@ class PagedServeEngine:
             return req.prompt
         return np.concatenate(
             [req.prompt, np.asarray(req.output, np.int32)])
+
+    def _lane_request(self, lane: int) -> Request | None:
+        return self.lanes[lane]
+
+    def _append_enc(self, lane: int, ek, ev, start: int,
+                    new_len: int) -> None:
+        fns = self._stream_fns()
+        ck, cv, cl = fns["lane_append"](
+            self.kv.pools["enc_k"], self.kv.pools["enc_v"],
+            self.kv.pools["enc_len"], ek, ev, lane, start, new_len)
+        self.kv.pools = dict(self.kv.pools, enc_k=ck, enc_v=cv,
+                             enc_len=cl)
 
     def _prefill_fn(self, rows: int, batch_keys: tuple, use_li: bool):
         """Jitted prefill producing a ``rows``-deep cache (= bucket
@@ -441,6 +387,20 @@ class PagedServeEngine:
             self.stats["prefill_compiles"] += 1
         return fn
 
+    def _stream_prefill_fn(self, rows: int):
+        """Jitted decoder-only streaming prefill — one compile per
+        bucket, counted in ``prefill_compiles`` like the offline path
+        (encdec always buckets, so ``last_index`` is always real)."""
+        key = ("stream", rows)
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+            fn = jax.jit(
+                lambda p, ek, ev, el, tk, li: self.api.stream_prefill(
+                    p, ek, ev, el, tk, rows, last_index=li))
+            self._prefill_fns[key] = fn
+            self.stats["prefill_compiles"] += 1
+        return fn
+
     def _admit_one(self, req: Request, lane: int) -> None:
         eff = self._effective_prompt(req)
         plen = len(eff)
@@ -450,18 +410,27 @@ class PagedServeEngine:
             self.kv.blocks_for(extra_rows + plen))
         tokens = np.zeros((1, bucket), np.int32)
         tokens[0, :plen] = eff
-        batch = {"tokens": jnp.asarray(tokens)}
-        if req.extra:
-            batch.update(
-                {k: jnp.asarray(v[None]) for k, v in req.extra.items()})
-        use_li = not self._exact_prefill
-        fn = self._prefill_fn(
-            bucket + extra_rows, tuple(sorted(batch)), use_li)
-        if use_li:
-            logits, pc = fn(self.params, batch,
+        stream = None
+        if req.kind == "audio":
+            ck, cv, el, ec, carry = self._stream_admit_state(req)
+            fn = self._stream_prefill_fn(bucket)
+            logits, pc = fn(self.params, ck, cv, el,
+                            jnp.asarray(tokens),
                             jnp.asarray([plen - 1], jnp.int32))
+            stream = (ec, carry)
         else:
-            logits, pc = fn(self.params, batch)
+            batch = {"tokens": jnp.asarray(tokens)}
+            if req.extra:
+                batch.update({k: jnp.asarray(v[None])
+                              for k, v in req.extra.items()})
+            use_li = not self._exact_prefill
+            fn = self._prefill_fn(
+                bucket + extra_rows, tuple(sorted(batch)), use_li)
+            if use_li:
+                logits, pc = fn(self.params, batch,
+                                jnp.asarray([plen - 1], jnp.int32))
+            else:
+                logits, pc = fn(self.params, batch)
         req.output.append(int(jnp.argmax(logits[0])))
         if len(req.output) >= req.max_new_tokens:
             # admit-time done check: the prefill token satisfied the
@@ -475,6 +444,8 @@ class PagedServeEngine:
         self.lanes[lane] = req
         self._lane_seq[lane] = self._admit_seq
         self._admit_seq += 1
+        if stream is not None:
+            self._streams[lane] = _StreamState(req, *stream)
 
     def _admit(self) -> None:
         while self.queue:
@@ -505,6 +476,7 @@ class PagedServeEngine:
         self.kv.release_lane(lane)
         self.lanes[lane] = None
         self._lane_seq.pop(lane, None)
+        self._streams.pop(lane, None)
         self.queue.insert(0, req)
         self.stats["preemptions"] += 1
 
@@ -512,8 +484,11 @@ class PagedServeEngine:
         """Before a decode step: every active lane's next write must fit
         its allocated blocks.  Grow by one block on demand; when the
         pool is dry, preempt the *youngest* active lane (its recompute
-        loss is smallest) and retry.  The growing lane itself is only
-        preempted when it is the sole active lane left."""
+        loss is smallest), preferring text lanes over streaming audio
+        lanes — an evicted audio request must also replay its consumed
+        chunks on re-admission, so its recompute loss is larger.  The
+        growing lane itself is only preempted when it is the sole
+        active lane left."""
         for lane in range(self.max_lanes):
             while (self.lanes[lane] is not None
                    and int(self.kv.pos[lane])
@@ -521,10 +496,12 @@ class PagedServeEngine:
                 if self.kv.free_blocks() > 0:
                     self.kv.grow_lane(lane, self.kv.allocator.alloc(1)[0])
                     continue
-                victims = sorted(
-                    (i for i, r in enumerate(self.lanes)
-                     if r is not None and i != lane),
-                    key=lambda i: self._lane_seq.get(i, 0))
+                others = [i for i, r in enumerate(self.lanes)
+                          if r is not None and i != lane]
+                text = [i for i in others
+                        if self.lanes[i].kind != "audio"]
+                victims = sorted(text or others,
+                                 key=lambda i: self._lane_seq.get(i, 0))
                 victim = victims[-1] if victims else lane
                 self._preempt(victim)
                 if victim == lane:
@@ -535,9 +512,11 @@ class PagedServeEngine:
         """Admit + one decode step for all active lanes.  Returns active
         request count after the step plus the queue backlog."""
         with self._plan_ctx():
-            # bucketed prefills compile lazily on first admit — the
+            # bucketed prefills compile lazily on first admit, and the
+            # streaming chunk feeds trace the encoder GEMMs — the
             # engine's policy/target must be ambient for those traces
             self._admit()
+            self._feed_streams()
         self._ensure_capacity()
         active = [i for i, r in enumerate(self.lanes) if r is not None]
         if not active:
@@ -561,10 +540,5 @@ class PagedServeEngine:
                 self.kv.release_lane(i)
                 self.lanes[i] = None
                 self._lane_seq.pop(i, None)
+                self._streams.pop(i, None)
         return sum(r is not None for r in self.lanes) + len(self.queue)
-
-    def run_until_drained(self, max_steps: int = 1000) -> list[Request]:
-        for _ in range(max_steps):
-            if self.step() == 0 and not self.queue:
-                break
-        return self.finished

@@ -4,8 +4,10 @@ block tables, host-side alloc/free.
 The device state is a set of *block pools* — ``paged`` leaves shaped
 [L, num_blocks, block_size, ...] shared by every request — plus ``lane``
 leaves ([L, max_lanes, ...]) for states that are per-request but fixed
-size (SSM/conv recurrent state, encoder K/V).  Which leaf is which comes
-from the model family's ``paged_layout()``.
+size (SSM/conv recurrent state, encoder K/V) and ``lane_scalar`` leaves
+([max_lanes] — one scalar per request, e.g. the streaming ``enc_len``
+frame count).  Which leaf is which comes from the model family's
+``paged_layout()``.
 
 Everything *about* the blocks lives on the host: the free list, each
 lane's block list, the [max_lanes, blocks_per_lane] int32 block tables,
@@ -169,6 +171,10 @@ class PagedKVCache:
                         pool.shape[0], nb * bs, *pool.shape[3:])
                     flat = flat.at[:, idx].set(src[:, 0], mode="drop")
                     new[name] = flat.reshape(pool.shape)
+                elif kind == "lane_scalar":
+                    # one scalar per lane ([max_lanes] pool, [B=1] src):
+                    # e.g. the encdec streaming enc_len frame count
+                    new[name] = pool.at[lane].set(src[0])
                 else:  # lane-resident state, fixed size
                     new[name] = jax.lax.dynamic_update_index_in_dim(
                         pool, src[:, 0], lane, axis=1)

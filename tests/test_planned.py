@@ -7,8 +7,6 @@ path match XLA's; (c) model forward/decode passes actually execute their
 GEMMs through mapper plans (``planned_report`` routing assertions).
 """
 
-import warnings
-
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -17,7 +15,6 @@ import pytest
 from repro.core.autotune import PlanPolicy
 from repro.kernels import planned, ref
 from repro.kernels.planned import (
-    PLANNED_ENV,
     plan_for,
     planned_bmm,
     planned_dense,
@@ -96,12 +93,12 @@ def test_planned_bmm_out_dtype_accumulates_without_upcast():
                                atol=1e-5, rtol=1e-5)
 
 
-def test_planned_bmm_out_dtype_fallback_agrees(monkeypatch):
+def test_planned_bmm_out_dtype_fallback_agrees():
     a = _draw((4, 8, 32), "float32").astype(jnp.bfloat16)
     b = _draw((4, 32, 8), "float32").astype(jnp.bfloat16)
     on = planned_bmm(a, b, out_dtype=jnp.float32)
-    monkeypatch.setenv(PLANNED_ENV, "off")
-    off = planned_bmm(a, b, out_dtype=jnp.float32)
+    with planned.override(enabled=False):
+        off = planned_bmm(a, b, out_dtype=jnp.float32)
     assert off.dtype == jnp.float32
     np.testing.assert_allclose(np.asarray(on), np.asarray(off),
                                atol=1e-5, rtol=1e-5)
@@ -120,12 +117,12 @@ def test_planned_bmm_collapses_batch_dims():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("dtype", DTYPES)
-def test_env_off_falls_back_and_agrees(monkeypatch, dtype):
+def test_disabled_facade_falls_back_and_agrees(dtype):
     x, w = _draw((8, 16), dtype), _draw((16, 8), dtype)
     on = planned_dense(x, w, site="t.on")
-    monkeypatch.setenv(PLANNED_ENV, "off")
     planned_report_clear()
-    off = planned_dense(x, w, site="t.off")
+    with planned.override(enabled=False):
+        off = planned_dense(x, w, site="t.off")
     rep = planned_report()["t.off"]
     assert rep["planned"] == 0 and rep["fallback"] == 1
     assert rep["reasons"] == {"disabled": 1}
@@ -255,12 +252,12 @@ def test_decode_step_executes_planned_gemms():
         assert rep[site]["fallback"] == 0, (site, rep[site])
 
 
-def test_forward_matches_xla_fallback(monkeypatch):
+def test_forward_matches_xla_fallback():
     """The planned model forward agrees with the all-XLA model forward."""
     cfg, api, params, toks = _dense_setup()
     planned_loss = api.loss(params, {"tokens": toks, "labels": toks})
-    monkeypatch.setenv(PLANNED_ENV, "off")
-    xla_loss = api.loss(params, {"tokens": toks, "labels": toks})
+    with planned.override(enabled=False):
+        xla_loss = api.loss(params, {"tokens": toks, "labels": toks})
     np.testing.assert_allclose(float(planned_loss), float(xla_loss),
                                atol=1e-3, rtol=1e-4)
 
@@ -287,7 +284,7 @@ def test_supported_dtypes_cover_parity_sweep():
 
 
 # ---------------------------------------------------------------------------
-# configuration surface: configure / override / deprecated env alias
+# configuration surface: configure / override
 # ---------------------------------------------------------------------------
 
 def test_configure_disables_planning():
@@ -322,24 +319,15 @@ def test_override_restores_previous_config():
     assert planned.current_config() == planned.PlannedConfig()
 
 
-def test_configure_wins_over_env_alias(monkeypatch):
-    monkeypatch.setenv(PLANNED_ENV, "off")
-    try:
-        planned.configure(enabled=True)
-        assert planned.planned_enabled()
-    finally:
-        planned.reset_configuration()
-    assert not planned.planned_enabled()  # alias applies again
-
-
-def test_env_alias_warns_deprecation_once(monkeypatch):
-    monkeypatch.setenv(PLANNED_ENV, "off")
-    monkeypatch.setattr(planned, "_ENV_WARNED", False)
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        planned.current_config()
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        planned.current_config()  # second read stays silent
+def test_env_alias_is_retired(monkeypatch):
+    """The old REPRO_PLANNED env var must be dead code: setting it
+    changes nothing (configure()/override() are the only configuration
+    path), and the module exports no env-shim surface."""
+    monkeypatch.setenv("REPRO_PLANNED", "off")
+    planned.reset_configuration()
+    assert planned.planned_enabled()  # env var ignored
+    assert not hasattr(planned, "PLANNED_ENV")
+    assert not hasattr(planned, "_ENV_WARNED")
 
 
 def test_default_policy_is_cached():

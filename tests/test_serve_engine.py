@@ -148,13 +148,15 @@ def test_plan_report_is_a_warmup_delta():
     assert "attn.decode_scores" in eng.plan_report
 
 
-def test_engine_serves_with_planned_off(monkeypatch):
-    monkeypatch.setenv("REPRO_PLANNED", "off")
-    cfg, eng = _engine(max_slots=2)
-    assert all(st["planned"] == 0 for st in eng.plan_report.values())
-    for p in _prompts(cfg, 2):
-        eng.submit(p, max_new_tokens=3)
-    done = eng.run_until_drained()
+def test_engine_serves_with_planned_off():
+    from repro.kernels import planned
+
+    with planned.override(enabled=False):
+        cfg, eng = _engine(max_slots=2)
+        assert all(st["planned"] == 0 for st in eng.plan_report.values())
+        for p in _prompts(cfg, 2):
+            eng.submit(p, max_new_tokens=3)
+        done = eng.run_until_drained()
     assert len(done) == 2 and all(len(r.output) == 3 for r in done)
 
 

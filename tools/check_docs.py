@@ -35,6 +35,12 @@ Three checks, so the docs cannot silently rot as the code grows:
    the ``bench_serving`` load generator), and docs/architecture.md must
    mention ``PagedServeEngine`` — the serving engine cannot change
    undocumented.
+8. **Streaming coverage**: docs/streaming.md must exist and document
+   the chunked audio surface (``make_engine``, ``submit_audio_stream``,
+   the ``AudioFrontend``/``FrontendConfig`` chunk contract, the planned
+   frontend stages, the ``enc_len`` cross-attention mask and the
+   ``decode_compiles`` pin), and docs/architecture.md must mention
+   ``make_engine`` — the streaming surface cannot change undocumented.
 
     python tools/check_docs.py          # exits non-zero on any failure
 """
@@ -56,6 +62,11 @@ SERVING_DOC = ROOT / "docs" / "serving.md"
 HIERARCHY_DOC = ROOT / "docs" / "hierarchy.md"
 SERVING_TERMS = ("PagedServeEngine", "PagedKVCache", "Scheduler",
                  "block table", "bench_serving", "AOT")
+STREAMING_DOC = ROOT / "docs" / "streaming.md"
+STREAMING_TERMS = ("make_engine", "submit_audio_stream", "AudioFrontend",
+                   "FrontendConfig", "chunk_samples", "planned_fir",
+                   "planned_fft2d", "planned_conv2d", "enc_len",
+                   "decode_compiles")
 PLAN_MODES = ("modelled", "cached", "measured")
 HIERARCHY_TERMS = ("HierarchicalTarget", "HierarchicalPlan",
                    "SERVING_HIERARCHICAL_TARGET")
@@ -284,6 +295,25 @@ def check_serving_docs() -> list[str]:
     return errors
 
 
+def check_streaming_docs() -> list[str]:
+    if not STREAMING_DOC.exists():
+        return ["docs/streaming.md missing (streaming coverage check)"]
+    errors = []
+    text = STREAMING_DOC.read_text(encoding="utf-8")
+    for term in STREAMING_TERMS:
+        if term not in text:
+            errors.append(
+                f"docs/streaming.md: {term!r} is not documented (chunked "
+                "audio streaming surface)")
+    if ARCHITECTURE.exists():
+        arch = ARCHITECTURE.read_text(encoding="utf-8")
+        if "make_engine" not in arch:
+            errors.append(
+                "docs/architecture.md: make_engine (the unified engine "
+                "constructor) is not documented")
+    return errors
+
+
 def main() -> int:
     names = registered_names()
     hooked = systolic_hooked_names()
@@ -291,7 +321,8 @@ def main() -> int:
     errors = (check_links() + check_registry_coverage(names)
               + check_systolic_coverage(hooked)
               + check_fusion_coverage(capable) + check_autotune_docs()
-              + check_hierarchy_docs() + check_serving_docs())
+              + check_hierarchy_docs() + check_serving_docs()
+              + check_streaming_docs())
     for e in errors:
         print(f"FAIL {e}")
     n_links = sum(

@@ -1,6 +1,6 @@
 #!/usr/bin/env python
 """Bench-regression gate: compare a fresh ``benchmarks/run.py --ci`` JSON
-against the committed baseline (``benchmarks/BENCH_PR9.json``).
+against the committed baseline (``benchmarks/BENCH_PR10.json``).
 
 Timings from different machines are not comparable raw, so the gate is
 *machine-normalized*: it computes the per-spec ratio new/baseline, takes
@@ -59,7 +59,28 @@ rate, schema 4) gates:
     the ordering gates raw: paged ``tokens_per_sec`` must stay strictly
     above slot's (the continuous-batching win is the point of the row).
 
-    python tools/compare_bench.py benchmarks/BENCH_PR9.json BENCH_NEW.json
+The ``streaming`` section (planned audio frontend + chunked streaming
+admission, schema 6) gates:
+
+  * a streaming row present in the baseline may not go missing;
+  * ``frontend.planned_sites`` may not drop — each ``frontend.*`` call
+    site must keep planning through the facade with zero fallbacks, or
+    the audio pipeline silently stopped exercising the mapping path;
+  * frontend planned vs XLA timings come from the same fresh run, so
+    ``speedup`` gates raw against the baseline only via the
+    machine-normalized ``planned_us``;
+  * ``first_frame.ratio`` (offline/chunked first-logits latency) must
+    stay > 1.0 — chunked admission genuinely starting decode before the
+    utterance ends is the point of the row (same-run, no
+    normalization);
+  * ``serving.decode_compiles`` gates exactly at the baseline value
+    (1): the streaming engine's decode executable is AOT-compiled once
+    for its whole life;
+  * ``serving.steady_plan_misses`` / ``steady_measure_calls`` /
+    ``steady_prefill_compiles`` may not grow — an identical second
+    audio stream must replan, re-measure, and retrace *nothing*.
+
+    python tools/compare_bench.py benchmarks/BENCH_PR10.json BENCH_NEW.json
 
 Exit code 0 = within tolerance, 1 = regression.  Dependency-free.
 """
@@ -134,6 +155,7 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
     errors += compare_chains(baseline, fresh)
     errors += compare_hierarchy(baseline, fresh, med, tolerance)
     errors += compare_serving(baseline, fresh, med, tolerance)
+    errors += compare_streaming(baseline, fresh, med, tolerance)
     return errors
 
 
@@ -232,6 +254,81 @@ def compare_serving(baseline: dict, fresh: dict, machine_factor: float,
     return errors
 
 
+def compare_streaming(baseline: dict, fresh: dict, machine_factor: float,
+                      tolerance: float) -> list[str]:
+    """Gates for the streaming audio rows (docstring above)."""
+    errors: list[str] = []
+    base = baseline.get("streaming", {})
+    new = fresh.get("streaming", {})
+    for row in sorted(set(base) - set(new)):
+        errors.append(
+            f"streaming {row}: in baseline but missing from fresh run")
+
+    if "frontend" in base and "frontend" in new:
+        b, n = base["frontend"], new["frontend"]
+        print(f"  streaming frontend planned={n.get('planned_us', 0):8.1f}us "
+              f"xla={n.get('xla_us', 0):8.1f}us "
+              f"x{n.get('speedup', 0):.2f} "
+              f"sites={n.get('planned_sites', 0)}")
+        if n.get("planned_sites", 0) < b.get("planned_sites", 0):
+            errors.append(
+                f"streaming frontend: planned call sites dropped "
+                f"{b.get('planned_sites')} -> {n.get('planned_sites')} — "
+                "a frontend stage stopped planning through the facade "
+                "(or started falling back); deterministic, no "
+                "normalization applies")
+        if b.get("planned_us", 0) > 0:
+            rel = (n.get("planned_us", 0) / b["planned_us"]) / max(
+                machine_factor, 1e-9)
+            if rel > tolerance:
+                errors.append(
+                    f"streaming frontend: planned chunk {rel:.2f}x slower "
+                    f"than the machine-normalized baseline (tolerance "
+                    f"{tolerance:.1f}x)")
+
+    if "first_frame" in base and "first_frame" in new:
+        b, n = base["first_frame"], new["first_frame"]
+        print(f"  streaming first-frame chunked={n.get('chunked_us', 0):8.1f}us "
+              f"offline={n.get('offline_us', 0):8.1f}us "
+              f"x{n.get('ratio', 0):.2f}")
+        if n.get("ratio", 0) <= 1.0:
+            errors.append(
+                f"streaming first-frame: chunked admission no longer "
+                f"beats the offline whole-utterance path to first logits "
+                f"(ratio {n.get('ratio')}; same-run timings, no machine "
+                "normalization applies)")
+        if b.get("chunked_us", 0) > 0:
+            rel = (n.get("chunked_us", 0) / b["chunked_us"]) / max(
+                machine_factor, 1e-9)
+            if rel > tolerance:
+                errors.append(
+                    f"streaming first-frame: chunked latency {rel:.2f}x "
+                    f"the machine-normalized baseline (tolerance "
+                    f"{tolerance:.1f}x)")
+
+    if "serving" in base and "serving" in new:
+        b, n = base["serving"], new["serving"]
+        print(f"  streaming serving decode_compiles="
+              f"{n.get('decode_compiles', 0)} "
+              f"steady misses={n.get('steady_plan_misses', 0)} "
+              f"measures={n.get('steady_measure_calls', 0)} "
+              f"prefill_compiles={n.get('steady_prefill_compiles', 0)}")
+        if n.get("decode_compiles", 0) != b.get("decode_compiles", 1):
+            errors.append(
+                f"streaming serving: decode_compiles "
+                f"{b.get('decode_compiles')} -> {n.get('decode_compiles')}"
+                " — the streaming engine's decode executable must be "
+                "AOT-compiled exactly once for its whole life")
+        for key in ("steady_plan_misses", "steady_measure_calls",
+                    "steady_prefill_compiles"):
+            if n.get(key, 0) > b.get(key, 0):
+                errors.append(
+                    f"streaming serving: {key} grew {b.get(key)} -> "
+                    f"{n.get(key)} — an identical second audio stream "
+                    "must retrace nothing (deterministic, gated exactly)")
+    return errors
+
+
 def compare_chains(baseline: dict, fresh: dict) -> list[str]:
     """Deterministic gates for the fused-chain rows (docstring above)."""
     errors: list[str] = []
@@ -280,7 +377,7 @@ def compare_chains(baseline: dict, fresh: dict) -> list[str]:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("baseline", help="committed BENCH_PR9.json")
+    ap.add_argument("baseline", help="committed BENCH_PR10.json")
     ap.add_argument("fresh", help="fresh run.py --ci output")
     ap.add_argument("--tolerance", type=float, default=2.0,
                     help="allowed per-spec slowdown relative to the "
